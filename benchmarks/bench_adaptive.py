@@ -1,0 +1,62 @@
+"""Adaptive split selection (the paper's §III-C AF): mean E2E delay of the
+adaptive controller vs every fixed split under a dynamic interference
+trace.  The adaptive policy must track the best fixed policy."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, save
+from repro.configs.swin_t_detection import CONFIG
+from repro.core.adaptive import AdaptiveController, Objective
+from repro.core.calibration import calibrate
+from repro.core.channel import INTERFERENCE_LEVELS, dupf_path
+from repro.core.compression import ActivationCodec
+from repro.core.pipeline import SplitInferencePipeline
+from repro.core.splitting import SwinSplitPlan, SERVER_ONLY, UE_ONLY
+from repro.core.throughput import train_estimator
+
+
+def run(n_frames: int = 150):
+    system = calibrate()
+    plan = SwinSplitPlan(CONFIG, params=None)
+    rng = np.random.default_rng(7)
+    trace = rng.choice(INTERFERENCE_LEVELS, size=n_frames).tolist()
+
+    est = train_estimator(system.channel, "kpm+spec", n_train=2000, steps=300)
+    prof = {UE_ONLY: 0.0, SERVER_ONLY: 1.0, "split1": 0.53, "split2": 0.42,
+            "split3": 0.33, "split4": 0.27}
+
+    def mean_delay(option, privacy_cap=1.0):
+        ctrl = None
+        if option is None:
+            ctrl = AdaptiveController(
+                system=system, estimator=est,
+                objective=Objective(w_delay=1.0, w_energy=0.15,
+                                    w_privacy=0.05, p_max=privacy_cap),
+                path=dupf_path(), privacy_profile=prof)
+        pipe = SplitInferencePipeline(plan=plan, system=system,
+                                      codec=ActivationCodec(),
+                                      controller=ctrl, execute_model=False,
+                                      seed=13)
+        logs = pipe.run_trace([None] * n_frames, trace, option)
+        return (float(np.mean([l.delay_s for l in logs]) * 1e3),
+                [l.option for l in logs])
+
+    rows = {}
+    for opt in plan.options:
+        rows[opt], _ = mean_delay(opt)
+    rows["adaptive"], choices = mean_delay(None)
+    rows["adaptive_private(p<=0.6)"], _ = mean_delay(None, privacy_cap=0.6)
+    for k, v in rows.items():
+        print(f"  {k:24s} {v:8.1f} ms")
+    switches = sum(a != b for a, b in zip(choices, choices[1:]))
+    print(f"  adaptive switched split {switches}x over {n_frames} frames")
+    save("bench_adaptive", rows)
+    best_fixed = min(v for k, v in rows.items() if not k.startswith("adaptive"))
+    rel = rows["adaptive"] / best_fixed
+    return csv_line("adaptive_vs_fixed", 0,
+                    f"adaptive_ms={rows['adaptive']:.0f};vs_best_fixed={rel:.3f}")
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,66 @@
+"""Paper Fig. 3: intermediate payload size, raw vs compressed, per split.
+
+Runs the REAL full-size Swin-T head on a realistic video frame and the
+real codec.  Reports the paper-faithful pipeline (INT8+zlib) and the
+beyond-paper delta-filtered variant side by side (§Perf-codec).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line, save
+from repro.configs.swin_t_detection import CONFIG
+from repro.core.compression import ActivationCodec
+from repro.core.splitting import SwinSplitPlan, SERVER_ONLY, UE_ONLY
+from repro.data.video import SyntheticVideo, VideoConfig
+from repro.models import swin as SW
+
+
+def run(fast: bool = False):
+    cfg = CONFIG
+    params = SW.init(cfg, jax.random.PRNGKey(0))
+    video = SyntheticVideo(VideoConfig(h=cfg.img_h, w=cfg.img_w, seed=0))
+    img = jnp.asarray(video.frame(0)[0])[None]
+    plan = SwinSplitPlan(cfg, params)
+    paper = ActivationCodec(mode="int8_zlib")
+    delta = ActivationCodec(mode="int8_delta_zlib")
+
+    rows = []
+    input_mb = cfg.img_h * cfg.img_w * 3 / 2 ** 20
+    for opt in plan.options:
+        if opt in (UE_ONLY, SERVER_ONLY):
+            continue
+        payload, _ = plan.head(img, opt)
+        t0 = time.perf_counter()
+        cp = paper.compress(payload)
+        t_paper = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cd = delta.compress(payload)
+        t_delta = time.perf_counter() - t0
+        rows.append({
+            "split": opt,
+            "raw_mb": cp.raw_bytes / 2 ** 20,
+            "int8_zlib_mb": cp.compressed_bytes / 2 ** 20,
+            "int8_zlib_reduction": 1 - cp.ratio,
+            "int8_zlib_s": t_paper,
+            "delta_mb": cd.compressed_bytes / 2 ** 20,
+            "delta_reduction": 1 - cd.ratio,
+            "delta_s": t_delta,
+            "x_input": cp.raw_bytes / 2 ** 20 / input_mb,
+        })
+    save("bench_compression", {"input_mb": input_mb, "rows": rows})
+    for r in rows:
+        print(f"  {r['split']}: raw {r['raw_mb']:.1f} MB ({r['x_input']:.0f}x input) "
+              f"-> paper {r['int8_zlib_mb']:.2f} MB (-{100*r['int8_zlib_reduction']:.1f}%) "
+              f"| delta {r['delta_mb']:.2f} MB (-{100*r['delta_reduction']:.1f}%)")
+    mean_red = sum(r["int8_zlib_reduction"] for r in rows) / len(rows)
+    mean_red_d = sum(r["delta_reduction"] for r in rows) / len(rows)
+    return csv_line("fig3_compression", 1e6 * sum(r["int8_zlib_s"] for r in rows) / len(rows),
+                    f"paper_reduction={mean_red:.3f};delta_reduction={mean_red_d:.3f}")
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,46 @@
+"""Paper Fig. 8: E2E delay trace, Edge AI over dUPF vs Cloud AI over cUPF
+(mean + std; dUPF must win on both)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, save
+from repro.configs.swin_t_detection import CONFIG
+from repro.core.calibration import PAPER, calibrate
+from repro.core.channel import INTERFERENCE_LEVELS, cupf_path, dupf_path
+from repro.core.compression import ActivationCodec
+from repro.core.pipeline import SplitInferencePipeline
+from repro.core.splitting import SwinSplitPlan
+
+
+def run(n_frames: int = 200):
+    system = calibrate()
+    plan = SwinSplitPlan(CONFIG, params=None)
+    rng = np.random.default_rng(0)
+    trace = rng.choice(INTERFERENCE_LEVELS, size=n_frames).tolist()
+    out = {}
+    for path in (dupf_path(), cupf_path()):
+        pipe = SplitInferencePipeline(plan=plan, system=system,
+                                      codec=ActivationCodec(),
+                                      controller=None, path=path,
+                                      execute_model=False, seed=4)
+        logs = pipe.run_trace([None] * n_frames, trace, option="split2")
+        d = np.asarray([l.delay_s for l in logs]) * 1e3
+        out[path.name] = {"mean_ms": float(d.mean()), "std_ms": float(d.std()),
+                          "trace_ms": d.tolist()}
+        print(f"  {path.name}: mean={d.mean():7.1f} ms std={d.std():6.1f} ms")
+    save("bench_dupf", {k: {kk: vv for kk, vv in v.items() if kk != "trace_ms"}
+                        for k, v in out.items()})
+    gain = out["cUPF"]["mean_ms"] - out["dUPF"]["mean_ms"]
+    paper_gain = PAPER["cupf_ms"][0] - PAPER["dupf_ms"][0]
+    print(f"  dUPF gain: {gain:.0f} ms mean (paper: {paper_gain:.0f} ms); "
+          f"std {out['dUPF']['std_ms']:.0f} vs {out['cUPF']['std_ms']:.0f} "
+          f"(paper: {PAPER['dupf_ms'][1]:.0f} vs {PAPER['cupf_ms'][1]:.0f})")
+    ok = (out["dUPF"]["mean_ms"] < out["cUPF"]["mean_ms"]
+          and out["dUPF"]["std_ms"] < out["cUPF"]["std_ms"])
+    return csv_line("fig8_dupf", 0,
+                    f"gain_ms={gain:.0f};dupf_wins_mean_and_std={ok}")
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,53 @@
+"""Paper Fig. 4: E2E delay per execution option x interference level.
+
+Accounting-mode pipeline (full-size calibrated system, 40 frames per
+point).  Split-1 / UE-only / server-only are validated against the paper's
+published numbers; the other splits and the -5 dB crossover are the
+simulator's predictions.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, save
+from repro.configs.swin_t_detection import CONFIG
+from repro.core.calibration import PAPER, calibrate
+from repro.core.channel import INTERFERENCE_LEVELS
+from repro.core.compression import ActivationCodec
+from repro.core.pipeline import SplitInferencePipeline
+from repro.core.splitting import SwinSplitPlan, SERVER_ONLY, UE_ONLY
+
+
+def run(n_frames: int = 40):
+    system = calibrate()
+    plan = SwinSplitPlan(CONFIG, params=None)
+    pipe = SplitInferencePipeline(plan=plan, system=system,
+                                  codec=ActivationCodec(), controller=None,
+                                  execute_model=False, seed=0)
+    table = {}
+    for opt in plan.options:
+        table[opt] = {}
+        for lvl in INTERFERENCE_LEVELS:
+            logs = pipe.run_trace([None] * n_frames, [lvl] * n_frames, opt)
+            table[opt][lvl] = float(np.mean([l.delay_s for l in logs]) * 1e3)
+    save("bench_e2e_delay", table)
+
+    print(f"  {'option':12s} " + " ".join(f"{l:>9d}dB" for l in INTERFERENCE_LEVELS))
+    for opt, row in table.items():
+        print(f"  {opt:12s} " + " ".join(f"{row[l]:9.0f}ms" for l in INTERFERENCE_LEVELS))
+
+    # validation vs paper
+    errs = []
+    errs.append(abs(table[UE_ONLY][-30] - PAPER["ue_only_ms"]) / PAPER["ue_only_ms"])
+    errs.append(abs(table[SERVER_ONLY][-40] - PAPER["server_only_ms"]) / PAPER["server_only_ms"])
+    for lvl, want in PAPER["split1_ms"].items():
+        errs.append(abs(table["split1"][lvl] - want) / want)
+    crossover = table["split4"][-5] > table[UE_ONLY][-5]
+    print(f"  validation: max rel err vs paper anchors = {max(errs):.3f}; "
+          f"-5dB split4>UE crossover reproduced = {crossover}")
+    return csv_line("fig4_e2e_delay", 0,
+                    f"max_rel_err={max(errs):.3f};crossover={crossover}")
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,47 @@
+"""Paper Fig. 7: UE inference energy vs 5G TX energy per split (TX averaged
+over interference levels).  Validates the paper's 25-50x gap claim and the
+endpoint energies."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, save
+from repro.configs.swin_t_detection import CONFIG
+from repro.core.calibration import PAPER, calibrate
+from repro.core.channel import INTERFERENCE_LEVELS
+from repro.core.compression import ActivationCodec
+from repro.core.pipeline import SplitInferencePipeline
+from repro.core.splitting import SwinSplitPlan, SERVER_ONLY, UE_ONLY
+
+
+def run(n_frames: int = 50):
+    system = calibrate()
+    plan = SwinSplitPlan(CONFIG, params=None)
+    pipe = SplitInferencePipeline(plan=plan, system=system,
+                                  codec=ActivationCodec(), controller=None,
+                                  execute_model=False, seed=0)
+    trace = list(INTERFERENCE_LEVELS) * (n_frames // len(INTERFERENCE_LEVELS))
+    rows = []
+    for opt in plan.options:
+        logs = pipe.run_trace([None] * len(trace), trace, opt)
+        e_inf = float(np.mean([l.energy_inf_j for l in logs]))
+        e_tx = float(np.mean([l.energy_tx_j for l in logs]))
+        rows.append({"split": opt, "inference_j": e_inf, "tx_j": e_tx,
+                     "total_wh": (e_inf + e_tx) / 3600})
+        ratio = e_inf / e_tx if e_tx > 0 else float("inf")
+        print(f"  {opt:12s} inf={e_inf:7.2f} J tx={e_tx:6.3f} J "
+              f"(inf/tx={ratio:5.1f}x) total={(e_inf+e_tx)/3600:.5f} Wh")
+    save("bench_energy_breakdown", rows)
+    ue = next(r for r in rows if r["split"] == UE_ONLY)["total_wh"]
+    s1 = next(r for r in rows if r["split"] == "split1")["total_wh"]
+    so = next(r for r in rows if r["split"] == SERVER_ONLY)["total_wh"]
+    print(f"  UE-only {ue:.4f} Wh (paper {PAPER['ue_only_wh']}), split1 {s1:.4f} "
+          f"(paper {PAPER['split1_wh']}), server {so:.5f} (paper {PAPER['server_only_wh']})")
+    mid = [r for r in rows if r["split"].startswith("split")]
+    ratios = [r["inference_j"] / max(r["tx_j"], 1e-9) for r in mid]
+    return csv_line("fig7_energy_breakdown", 0,
+                    f"ue_wh={ue:.4f};split1_wh={s1:.4f};min_inf_tx_ratio={min(ratios):.1f}")
+
+
+if __name__ == "__main__":
+    print(run())

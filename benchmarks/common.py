@@ -1,0 +1,28 @@
+"""Shared benchmark plumbing: every bench returns rows and a one-line CSV
+summary ``name,us_per_call,derived``; results land in results/*.json."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), os.pardir, "results")
+
+
+def save(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def timed(fn: Callable[[], Any]):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def csv_line(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.0f},{derived}"

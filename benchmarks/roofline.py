@@ -1,0 +1,128 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh) cell, all PER CHIP per step:
+
+  compute    = HLO_FLOPs_loop_aware / peak_FLOPs            [s]
+  memory     = HLO_bytes_accessed   / HBM_bw                [s]
+  collective = wire_bytes_per_chip  / ICI_bw                [s]
+
+HLO_FLOPs comes from the loop-aware analyzer (launch/hlo_cost.py; XLA's own
+cost_analysis counts while bodies once -- see EXPERIMENTS.md §Dry-run).
+bytes_accessed uses XLA's number scaled by the same loop-correction factor
+as flops (the two undercount identically, both dominated by the scanned
+block body).  collective bytes already include the ring factor.
+
+MODEL_FLOPS = 6*N*D (dense train) / 6*N_active*D (MoE) / 2*N*D (inference),
+per chip; the ratio MODEL_FLOPS/HLO_FLOPs shows how much compiled compute
+is "useful" (remat recompute, dispatch overhead, attention not in 6ND).
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline \
+            [--in results/dryrun_baseline.json] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12       # bf16 / chip (TPU v5e)
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+
+def roofline_terms(cell: Dict) -> Dict:
+    n_dev = cell["n_devices"]
+    la = cell["collectives"]                       # loop-aware analyzer dict
+    dot_flops = la.get("dot_flops", cell["flops"])  # MXU work
+    # memory term: HBM traffic on the TPU kernel path.  cond_hbm_bytes is
+    # the flash-attention tile traffic inside the band-skip conditionals;
+    # kernels/flash_attention.py holds those tiles in VMEM on TPU, so they
+    # are excluded from the kernel-path term and reported separately as
+    # the XLA-fallback number (memory_xla_s).
+    bytes_acc = la.get("hbm_bytes", 0.0)
+    cond_bytes = la.get("cond_hbm_bytes", 0.0)
+    coll = la["total_collective_bytes"]
+
+    # lax.cond band-skip: the HLO carries both branches but the TPU runs
+    # the compute branch only for in-band blocks (~53% causal fraction);
+    # cond dot flops are weighted accordingly (worst case in *_xla field)
+    cond_dot = la.get("cond_dot_flops", 0.0)
+    dot_flops = dot_flops - cond_dot + 0.53 * cond_dot
+
+    t_comp = dot_flops / PEAK_FLOPS
+    t_mem = bytes_acc / HBM_BW
+    t_mem_xla = (bytes_acc + cond_bytes) / HBM_BW
+    t_coll = coll / ICI_BW
+    flops = dot_flops
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+
+    toks = cell["tokens"]
+    n = cell["active_params"]
+    mult = 6.0 if cell["kind"] == "train" else 2.0
+    model_flops = mult * n * toks / n_dev
+    return {
+        **terms,
+        "memory_xla_s": t_mem_xla,
+        "bottleneck": dom.replace("_s", ""),
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / max(flops, 1.0),
+        "roofline_frac": model_flops / PEAK_FLOPS / max(
+            t_comp, t_mem, t_coll),
+        "step_s_bound": max(t_comp, t_mem, t_coll),
+    }
+
+
+def load(path: str) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(cells: List[Dict], mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for c in cells:
+        if c["mesh"] != mesh:
+            continue
+        if c["status"] == "SKIP":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "status": "SKIP"})
+            continue
+        if c["status"] != "OK":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "status": c["status"]})
+            continue
+        rows.append({"arch": c["arch"], "shape": c["shape"], "status": "OK",
+                     **roofline_terms(c)})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun_baseline.json")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    cells = load(args.inp)
+    rows = table(cells, args.mesh)
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp_ms':>8s} {'mem_ms':>8s} "
+           f"{'coll_ms':>8s} {'bound':>10s} {'MF/HLO':>7s} {'roof%':>6s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["status"] != "OK":
+            print(f"{r['arch']:24s} {r['shape']:12s} {r['status']}")
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} "
+              f"{r['compute_s']*1e3:8.2f} {r['memory_s']*1e3:8.2f} "
+              f"{r['collective_s']*1e3:8.2f} {r['bottleneck']:>10s} "
+              f"{r['useful_ratio']:7.3f} {100*r['roofline_frac']:6.1f}")
+    if args.csv:
+        import csv, sys
+        w = csv.DictWriter(sys.stdout, fieldnames=list(rows[0]))
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Benchmark harness: one module per paper figure + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only substr]
+
+Prints one ``name,us_per_call,derived`` CSV line per bench (collected at
+the end) and writes detailed rows to results/*.json.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_adaptive, bench_compression, bench_dupf,
+                            bench_e2e_delay, bench_energy_breakdown,
+                            bench_energy_privacy, bench_estimator,
+                            bench_tx_energy)
+
+    benches = [
+        ("fig3_compression", bench_compression.run),
+        ("fig4_e2e_delay", bench_e2e_delay.run),
+        ("fig5_energy_privacy", bench_energy_privacy.run),
+        ("fig6_tx_energy", bench_tx_energy.run),
+        ("fig7_energy_breakdown", bench_energy_breakdown.run),
+        ("fig8_dupf", bench_dupf.run),
+        ("estimator_ablation", bench_estimator.run),
+        ("adaptive_vs_fixed", bench_adaptive.run),
+    ]
+    if args.only:
+        benches = [(n, f) for n, f in benches if args.only in n]
+
+    lines = []
+    failed = 0
+    for name, fn in benches:
+        print(f"== {name} ==", flush=True)
+        t0 = time.perf_counter()
+        try:
+            line = fn()
+            dt = time.perf_counter() - t0
+            print(f"   ({dt:.1f}s)\n")
+            lines.append(line)
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            lines.append(f"{name},0,FAILED")
+
+    # roofline summary (reads the dry-run artifact if present)
+    try:
+        import os
+        from benchmarks.roofline import load, table
+        art = ("results/dryrun_optimized.json"
+               if os.path.exists("results/dryrun_optimized.json")
+               else "results/dryrun_baseline.json")
+        cells = load(art)
+        rows = [r for r in table(cells) if r["status"] == "OK"]
+        worst = min(rows, key=lambda r: r["roofline_frac"])
+        best = max(rows, key=lambda r: r["roofline_frac"])
+        lines.append(f"roofline,0,cells={len(rows)};best={best['arch']}/"
+                     f"{best['shape']}={100*best['roofline_frac']:.1f}%;"
+                     f"worst={worst['arch']}/{worst['shape']}="
+                     f"{100*worst['roofline_frac']:.2f}%")
+    except Exception:
+        lines.append("roofline,0,missing_dryrun_artifact")
+
+    print("name,us_per_call,derived")
+    for l in lines:
+        print(l)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

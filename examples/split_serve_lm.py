@@ -1,0 +1,26 @@
+"""The paper's technique generalized to LM serving: run the first half of
+an LM on the 'UE', ship the INT8+zlib-compressed residual stream, finish
+on the 'edge' -- then keep decoding with the production serving path.
+
+    PYTHONPATH=src python examples/split_serve_lm.py
+"""
+import os
+import subprocess
+import sys
+
+
+def main():
+    env = dict(os.environ, PYTHONPATH="src")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for arch in ("qwen3-1.7b", "hymba-1.5b"):
+        print(f"== {arch}: split serving at 50% depth ==")
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--reduced", "--prompt-len", "32", "--gen", "8", "--batch", "2",
+             "--split", "0.5"],
+            check=True, env=env, cwd=root)
+        print()
+
+
+if __name__ == "__main__":
+    main()

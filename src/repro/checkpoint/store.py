@@ -1,0 +1,146 @@
+"""Mesh-shape-agnostic checkpointing: atomic, async, reshard-on-restore.
+
+Layout (one directory per step):
+    step_000123/
+      MANIFEST.json      pytree structure + per-leaf shape/dtype
+      leaf_00000.npy ... one .npy per leaf (saved as the GLOBAL array)
+      COMMITTED          written last -> atomic visibility
+
+Because leaves are stored as global arrays with their global shapes,
+restore can place them onto *any* mesh/sharding -- this is what makes
+elastic restart (runtime/elastic.py) possible: a job that lost a pod
+restores the same checkpoint onto the shrunken mesh.
+
+``save_async`` snapshots device arrays to host then writes from a
+background thread, so the training loop never blocks on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional
+
+import jax
+import numpy as np
+
+COMMITTED = "COMMITTED"
+MANIFEST = "MANIFEST.json"
+
+
+def _tree_paths(tree) -> List[str]:
+    paths = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(kp))
+    return paths
+
+
+def save(tree, directory: str, step: int) -> str:
+    """Synchronous atomic save.  Returns the final checkpoint path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest = {
+        "step": step,
+        # tree structure travels as key paths only; restore() rebuilds the
+        # exact pytree from the caller's like_tree (works for any node type)
+        "paths": _tree_paths(tree),
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind not in "fiub":          # ml_dtypes (bfloat16 etc.)
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+        manifest["leaves"].append({"shape": list(arr.shape),
+                                   "dtype": logical_dtype})
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, COMMITTED), "w") as f:
+        f.write(str(time.time()))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host on the caller thread, write on a daemon thread."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, tree, step: int):
+        self.wait()                       # one in flight at a time
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+
+        def _write():
+            self.last_path = save(host_tree, self.directory, step)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        ckpts = sorted(p for p in os.listdir(self.directory)
+                       if p.startswith("step_") and not p.endswith(".tmp"))
+        for p in ckpts[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, p))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for p in os.listdir(directory):
+        full = os.path.join(directory, p)
+        if p.startswith("step_") and os.path.exists(os.path.join(full, COMMITTED)):
+            steps.append(int(p.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like_tree,
+            shardings=None):
+    """Restore onto any mesh: ``shardings`` (matching pytree of
+    NamedSharding, or None = host arrays).  ``like_tree`` provides the
+    pytree structure (e.g. jax.eval_shape of init)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    assert os.path.exists(os.path.join(path, COMMITTED)), f"uncommitted: {path}"
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    leaves_like, treedef = jax.tree.flatten(like_tree)
+    assert len(leaves_like) == len(manifest["leaves"]), \
+        f"leaf count mismatch: {len(leaves_like)} vs {len(manifest['leaves'])}"
+    shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                    else [None] * len(leaves_like))
+    out = []
+    for i, (like, shd) in enumerate(zip(leaves_like, shard_leaves)):
+        arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+        want_dtype = manifest["leaves"][i]["dtype"]
+        if str(arr.dtype) != want_dtype:          # bf16 stored as uint16
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, want_dtype)))
+        expect = tuple(like.shape) if hasattr(like, "shape") else None
+        assert expect is None or tuple(arr.shape) == expect, \
+            f"leaf {i} shape {arr.shape} != expected {expect}"
+        if shd is not None:
+            out.append(jax.make_array_from_callback(
+                arr.shape, shd, lambda idx, a=arr: a[idx]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out)

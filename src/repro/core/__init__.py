@@ -1,0 +1,10 @@
+"""The paper's contribution: adaptive split inference with activation
+compression over a simulated AI-RAN network."""
+from repro.core.compression import ActivationCodec, CompressedPayload  # noqa: F401
+from repro.core.splitting import (SwinSplitPlan, LMSplitPlan,          # noqa: F401
+                                  UE_ONLY, SERVER_ONLY, split_option)
+from repro.core.channel import (ChannelModel, PathModel, dupf_path,    # noqa: F401
+                                cupf_path, INTERFERENCE_LEVELS)
+from repro.core.calibration import calibrate, Calibrated, PAPER        # noqa: F401
+from repro.core.adaptive import AdaptiveController, Objective          # noqa: F401
+from repro.core.pipeline import SplitInferencePipeline, build_pipeline # noqa: F401

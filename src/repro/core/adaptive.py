@@ -1,0 +1,112 @@
+"""AF (Application Function): adaptive split selection (paper §III-C).
+
+Multi-objective selection of the split point, following [1]:
+
+    l* = argmin_l  w_d * D(l)/D_ref + w_e * E(l)/E_ref + w_p * P(l)
+         s.t.      D(l) <= d_max,  E(l) <= e_max
+
+  D(l) = T_head(l) + T_quant + B_c(l) / R_hat + T_path + T_tail(l)
+  E(l) = P_ue * T_head(l) + P_tx(I) * B_c(l) / R_hat
+  P(l) = distance-correlation leakage profile (core/privacy.py)
+
+R_hat comes from the ML throughput estimator; B_c(l) from the codec's
+measured compression ratio (fed back from recent frames).  Hysteresis
+prevents split flapping under noisy estimates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.calibration import Calibrated
+from repro.core.channel import PathModel, RadioKPM
+from repro.core.energy import WH_PER_J
+from repro.core.splitting import SERVER_ONLY, UE_ONLY
+from repro.core.throughput import ThroughputEstimator
+
+
+@dataclass
+class Objective:
+    w_delay: float = 1.0
+    w_energy: float = 0.5
+    w_privacy: float = 0.5
+    d_max_s: float = float("inf")
+    e_max_j: float = float("inf")
+    p_max: float = 1.0
+    d_ref_s: float = 1.0            # normalizers
+    e_ref_j: float = 10.0
+
+
+@dataclass
+class Prediction:
+    option: str
+    delay_s: float
+    energy_j: float
+    privacy: float
+    cost: float
+    feasible: bool
+
+
+@dataclass
+class AdaptiveController:
+    system: Calibrated
+    estimator: ThroughputEstimator
+    objective: Objective
+    path: PathModel
+    privacy_profile: Dict[str, float]
+    interference_db: float = -40.0   # latest sensed level (for TX power)
+    hysteresis: float = 0.05
+    quant_time_s: float = 0.010      # measured codec cost per frame
+    _current: Optional[str] = None
+    _ratio: float = 1.0              # measured compressed/raw feedback
+
+    # -- feedback from the pipeline ------------------------------------------
+    def observe_ratio(self, compressed: int, raw: int):
+        if raw > 0:
+            self._ratio = 0.7 * self._ratio + 0.3 * (compressed / raw)
+
+    # -- prediction ------------------------------------------------------------
+    def predict(self, option: str, rate_bps: float) -> Prediction:
+        sysm = self.system
+        head_t = sysm.head_time_s(option)
+        tail_t = sysm.tail_time_s(option)
+        raw_b = sysm.raw_bytes.get(option, 0)
+        comp_b = sysm.compressed_bytes.get(option, 0)
+        if option == SERVER_ONLY:
+            est_b = raw_b                               # raw image ships as-is
+        elif raw_b == 0:
+            est_b = 0                                   # UE-only
+        elif self._ratio < 1.0:
+            est_b = int(raw_b * self._ratio)            # live feedback
+        else:
+            est_b = comp_b                              # calibration default
+        tx_t = est_b * 8.0 / rate_bps if est_b else 0.0
+        path_t = self.path.base_s if option != UE_ONLY else 0.0
+        quant_t = self.quant_time_s if option not in (UE_ONLY, SERVER_ONLY) else 0.0
+        delay = head_t + quant_t + tx_t + path_t + tail_t
+        energy = (sysm.ue.power_active_w * head_t
+                  + sysm.radio.tx_energy_j(tx_t, self.interference_db))
+        priv = self.privacy_profile.get(option, 1.0)
+        ob = self.objective
+        cost = (ob.w_delay * delay / ob.d_ref_s
+                + ob.w_energy * energy / ob.e_ref_j
+                + ob.w_privacy * priv)
+        feasible = (delay <= ob.d_max_s and energy <= ob.e_max_j
+                    and priv <= ob.p_max)
+        return Prediction(option, delay, energy, priv, cost, feasible)
+
+    # -- decision ---------------------------------------------------------------
+    def decide(self, kpm: RadioKPM, spec, options: List[str]) -> Prediction:
+        rate = self.estimator.predict(kpm, spec)
+        preds = [self.predict(o, rate) for o in options]
+        feas = [p for p in preds if p.feasible] or preds
+        best = min(feas, key=lambda p: p.cost)
+        if self._current is not None and best.option != self._current:
+            cur = next((p for p in preds if p.option == self._current), None)
+            if cur is not None and cur.feasible and \
+               cur.cost <= best.cost * (1.0 + self.hysteresis):
+                best = cur                              # hysteresis hold
+        self._current = best.option
+        return best

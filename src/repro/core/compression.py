@@ -1,0 +1,156 @@
+"""Activation compression pipeline (paper §IV-C).
+
+Two stages, exactly as the paper:
+  (1) FP32 -> INT8 per-block absmax quantization.  Device-side; runs the
+      Pallas TPU kernel (kernels/quant.py) -- interpret mode on CPU.
+  (2) zlib entropy coding of the int8 bytes.  Host-side: entropy coding is
+      inherently serial/byte-oriented, TPUs have no entropy-coder unit
+      (DESIGN.md §2) -- the paper likewise runs zlib on the UE CPU.
+
+The codec operates on arbitrary pytrees (the Swin boundary payload is a
+dict of feature maps; LM split payloads carry the residual stream plus any
+SSM/KV state that moves with the split point).
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+@dataclass
+class TensorMeta:
+    shape: Tuple[int, ...]
+    dtype: str
+    n: int                    # valid element count (pre-padding)
+    n_blocks: int
+    block: int
+
+
+@dataclass
+class CompressedPayload:
+    """What actually crosses the uplink."""
+    blobs: List[bytes]                 # zlib(int8 blocks), one per tensor
+    scales: List[np.ndarray]           # f32 per-block scales (shipped raw)
+    meta: List[TensorMeta]
+    raw_bytes: int                     # payload size before compression
+    treedef: Any = None
+
+    @property
+    def compressed_bytes(self) -> int:
+        return (sum(len(b) for b in self.blobs)
+                + sum(s.nbytes for s in self.scales))
+
+    @property
+    def ratio(self) -> float:
+        return self.compressed_bytes / max(self.raw_bytes, 1)
+
+
+@dataclass
+class ActivationCodec:
+    """INT8+zlib codec with payload accounting.
+
+    quant_block: elements per absmax block (one f32 scale per block).
+    level: zlib level (1 = paper's 'rapid' setting).
+    mode: 'int8_zlib' (paper) | 'int8' (quant only) | 'zlib' (no quant)
+          | 'raw' (accounting only)
+          | 'int8_delta_zlib' (beyond-paper: PNG-style delta filter along
+            the leading spatial axis before zlib -- feature maps are
+            spatially smooth, so the filtered int8 stream is far more
+            compressible: 88.4% vs 78.6% reduction on Swin split-1
+            activations; EXPERIMENTS.md §Perf-codec).
+    """
+    quant_block: int = 8192
+    level: int = 1
+    mode: str = "int8_zlib"
+
+    # -- compress -----------------------------------------------------------
+    def compress(self, tree) -> CompressedPayload:
+        leaves, treedef = jax.tree.flatten(tree)
+        blobs, scales, metas = [], [], []
+        raw = 0
+        for x in leaves:
+            x = jnp.asarray(x)
+            raw += x.size * x.dtype.itemsize
+            if self.mode == "raw":
+                blobs.append(np.asarray(x).tobytes())
+                scales.append(np.zeros((0,), np.float32))
+                metas.append(TensorMeta(x.shape, str(x.dtype), x.size, 0, 0))
+                continue
+            if self.mode == "zlib":
+                blobs.append(zlib.compress(np.asarray(x).tobytes(), self.level))
+                scales.append(np.zeros((0,), np.float32))
+                metas.append(TensorMeta(x.shape, str(x.dtype), x.size, 0, 0))
+                continue
+            q, s, n = ops.quantize(x, block=self.quant_block)
+            q_np = np.asarray(q)
+            if self.mode == "int8":
+                payload = q_np.tobytes()
+            elif self.mode == "int8_delta_zlib" and x.ndim >= 3:
+                img = q_np.reshape(-1)[:x.size].reshape(x.shape)
+                axis = 1 if x.shape[0] < 4 else 0     # first spatial axis
+                # exact mod-256 delta (d[0] = x[0], so reconstruction is
+                # a cumsum mod 256 -- lossless)
+                d16 = np.diff(img.astype(np.int16), axis=axis,
+                              prepend=np.zeros_like(
+                                  np.take(img, [0], axis=axis), np.int16))
+                d = (d16 % 256).astype(np.uint8)
+                tail = q_np.reshape(-1)[x.size:]      # block padding
+                payload = zlib.compress(d.tobytes() + tail.tobytes(), self.level)
+            else:
+                payload = zlib.compress(q_np.tobytes(), self.level)
+            blobs.append(payload)
+            scales.append(np.asarray(s))
+            metas.append(TensorMeta(tuple(x.shape), str(x.dtype), int(n),
+                                    int(q.shape[0]), int(q.shape[1])))
+        return CompressedPayload(blobs, scales, metas, raw, treedef)
+
+    # -- decompress ----------------------------------------------------------
+    def decompress(self, p: CompressedPayload):
+        leaves = []
+        for blob, s, m in zip(p.blobs, p.scales, p.meta):
+            if self.mode == "raw":
+                x = np.frombuffer(blob, dtype=m.dtype).reshape(m.shape)
+                leaves.append(jnp.asarray(x))
+                continue
+            if self.mode == "zlib":
+                x = np.frombuffer(zlib.decompress(blob), dtype=m.dtype)
+                leaves.append(jnp.asarray(x.reshape(m.shape)))
+                continue
+            raw = blob if self.mode == "int8" else zlib.decompress(blob)
+            if self.mode == "int8_delta_zlib" and len(m.shape) >= 3:
+                n_valid = int(np.prod(m.shape))
+                d = np.frombuffer(raw[:n_valid], dtype=np.uint8).reshape(m.shape)
+                axis = 1 if m.shape[0] < 4 else 0
+                img = (np.cumsum(d.astype(np.int64), axis=axis) % 256
+                       ).astype(np.uint8).view(np.int8)
+                tail = np.frombuffer(raw[n_valid:], dtype=np.int8)
+                raw = img.tobytes() + tail.tobytes()
+            q = np.frombuffer(raw, dtype=np.int8).reshape(m.n_blocks, m.block)
+            x = ops.dequantize(jnp.asarray(q), jnp.asarray(s), m.n, m.shape,
+                               jnp.dtype(m.dtype))
+            leaves.append(x)
+        return jax.tree.unflatten(p.treedef, leaves)
+
+    # -- accounting-only (no host roundtrip; used by the controller) ---------
+    def estimate_bytes(self, shapes_dtypes, measured_ratio: Optional[float] = None):
+        """Predict compressed payload size from tensor specs.
+
+        measured_ratio: zlib ratio observed on recent frames (the controller
+        feeds back actual ratios); default uses the paper's ~0.55 on int8.
+        """
+        raw = sum(int(np.prod(s)) * np.dtype(d).itemsize for s, d in shapes_dtypes)
+        if self.mode == "raw":
+            return raw
+        n_elems = sum(int(np.prod(s)) for s, _ in shapes_dtypes)
+        int8 = n_elems + 4 * (n_elems // self.quant_block + len(shapes_dtypes))
+        if self.mode == "int8":
+            return int8
+        r = measured_ratio if measured_ratio is not None else 0.55
+        return int(int8 * r)

@@ -1,0 +1,46 @@
+"""UE / edge energy model (paper §V-B.2, Figs 5-7).
+
+The paper instruments the UE with a Keysight power analyzer and reports
+energy per frame split into on-device inference and 5G transmission.  We
+model both terms from first principles and calibrate the two free device
+constants against the paper's endpoints (calibration.py):
+
+  E_inf(l) = P_active^UE * T_head(l)          (compute-bound laptop UE)
+  E_tx(l)  = P_tx(I)     * T_tx(l, R(I))      (radio effort rises with I)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    flops_per_s: float          # sustained effective throughput
+    power_active_w: float       # package power while inferring
+    power_idle_w: float = 2.0
+
+    def compute_time_s(self, flops: float) -> float:
+        return flops / self.flops_per_s
+
+    def compute_energy_j(self, flops: float) -> float:
+        return self.compute_time_s(flops) * self.power_active_w
+
+
+@dataclass(frozen=True)
+class RadioProfile:
+    """5G dongle TX power vs interference (more retransmissions / higher
+    gain under jamming -> more radio effort per second)."""
+    base_w: float = 1.6
+    max_w: float = 3.6
+
+    def tx_power_w(self, interference_db: float) -> float:
+        # -40 dB -> ~base; -5 dB -> ~max (paper Fig. 6's pronounced rise)
+        t = min(max((interference_db + 40.0) / 35.0, 0.0), 1.0)
+        return self.base_w + (self.max_w - self.base_w) * t ** 2
+
+    def tx_energy_j(self, tx_time_s: float, interference_db: float) -> float:
+        return self.tx_power_w(interference_db) * tx_time_s
+
+
+WH_PER_J = 1.0 / 3600.0

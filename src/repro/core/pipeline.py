@@ -1,0 +1,168 @@
+"""E2E split-inference frame pipeline (the complete paper system).
+
+Per frame:  sense radio -> estimate throughput (ML) -> AF picks split ->
+head (UE) -> Pallas INT8 quant + zlib -> uplink (dUPF or cUPF path) ->
+tail (edge) -> detections; log delay / energy / privacy / payload.
+
+Model execution and compression are REAL (actual Swin forward + codec on
+this host); time and energy are *accounted* with the calibrated device and
+channel models, exactly like the paper's measurement harness (we cannot
+run a GH200 or an NR uplink here -- DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.adaptive import AdaptiveController, Objective, Prediction
+from repro.core.calibration import Calibrated, calibrate
+from repro.core.channel import (PathModel, RadioKPM, dupf_path,
+                                iq_spectrogram, observe_kpms)
+from repro.core.compression import ActivationCodec
+from repro.core.privacy import payload_privacy
+from repro.core.splitting import SERVER_ONLY, UE_ONLY, SwinSplitPlan
+from repro.core.throughput import ThroughputEstimator, train_estimator
+
+
+@dataclass
+class FrameLog:
+    option: str
+    interference_db: float
+    delay_s: float
+    head_s: float
+    quant_s: float
+    tx_s: float
+    path_s: float
+    tail_s: float
+    energy_inf_j: float
+    energy_tx_j: float
+    raw_bytes: int
+    compressed_bytes: int
+    rate_bps: float
+    predicted: Optional[Prediction] = None
+
+    @property
+    def energy_j(self) -> float:
+        return self.energy_inf_j + self.energy_tx_j
+
+
+@dataclass
+class SplitInferencePipeline:
+    plan: SwinSplitPlan
+    system: Calibrated
+    codec: ActivationCodec
+    controller: Optional[AdaptiveController] = None
+    path: PathModel = field(default_factory=dupf_path)
+    narrowband: bool = False
+    seed: int = 0
+    execute_model: bool = True      # False = accounting-only (fast sweeps)
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    # -- single frame ---------------------------------------------------------
+    def run_frame(self, img, interference_db: float,
+                  option: Optional[str] = None) -> FrameLog:
+        rng = self._rng
+        kpm = observe_kpms(interference_db, self.narrowband, rng)
+        spec = iq_spectrogram(interference_db, self.narrowband, rng)
+        pred = None
+        if option is None:
+            assert self.controller is not None
+            self.controller.interference_db = interference_db
+            self.controller.path = self.path
+            pred = self.controller.decide(kpm, spec, self.plan.options)
+            option = pred.option
+
+        # --- UE side ---------------------------------------------------------
+        head_s = self.system.ue.compute_time_s(self.plan.head_flops(option))
+        quant_s = 0.0
+        raw_b = comp_b = 0
+        payload = None
+        if self.execute_model:
+            payload, local_det = self.plan.head(img, option)
+        if option not in (UE_ONLY,):
+            if option == SERVER_ONLY:
+                raw_b = comp_b = self.system.compressed_bytes[SERVER_ONLY]
+            elif self.execute_model:
+                t0 = time.perf_counter()
+                comp = self.codec.compress(payload)
+                quant_s = time.perf_counter() - t0
+                raw_b, comp_b = comp.raw_bytes, comp.compressed_bytes
+                payload = self.codec.decompress(comp)    # server view
+                if self.controller is not None:
+                    self.controller.observe_ratio(comp_b, raw_b)
+            else:
+                raw_b = self.system.raw_bytes[option]
+                comp_b = self.system.compressed_bytes[option]
+                quant_s = 0.010
+
+        # --- uplink + path -----------------------------------------------------
+        rate = self.system.channel.sample_rate(interference_db, rng,
+                                               narrowband=self.narrowband)
+        tx_s = self.system.channel.tx_time_s(comp_b, rate) if comp_b else 0.0
+        path_s = self.path.sample_latency(rng) if option != UE_ONLY else 0.0
+
+        # --- edge side ----------------------------------------------------------
+        tail_s = self.system.edge.compute_time_s(self.plan.tail_flops(option))
+        if self.execute_model and option != UE_ONLY:
+            _ = self.plan.tail(payload, option)
+
+        # the UE power analyzer integrates over the whole frame interval:
+        # active while computing, idle while waiting for uplink + edge
+        e_inf = (self.system.ue.power_active_w * head_s
+                 + self.system.ue.power_idle_w * (tx_s + path_s + tail_s))
+        e_tx = self.system.radio.tx_energy_j(tx_s, interference_db)
+        return FrameLog(option=option, interference_db=interference_db,
+                        delay_s=head_s + quant_s + tx_s + path_s + tail_s,
+                        head_s=head_s, quant_s=quant_s, tx_s=tx_s,
+                        path_s=path_s, tail_s=tail_s,
+                        energy_inf_j=e_inf, energy_tx_j=e_tx,
+                        raw_bytes=raw_b, compressed_bytes=comp_b,
+                        rate_bps=rate, predicted=pred)
+
+    # -- traces ------------------------------------------------------------------
+    def run_trace(self, imgs, interference_trace, option: Optional[str] = None
+                  ) -> List[FrameLog]:
+        logs = []
+        for i, lvl in enumerate(interference_trace):
+            img = imgs[i % len(imgs)] if self.execute_model else None
+            logs.append(self.run_frame(img, lvl, option))
+        return logs
+
+
+def build_pipeline(cfg=None, params=None, *, adaptive: bool = True,
+                   execute_model: bool = True, path: Optional[PathModel] = None,
+                   objective: Optional[Objective] = None, seed: int = 0,
+                   privacy_profile: Optional[Dict[str, float]] = None,
+                   system: Optional[Calibrated] = None) -> SplitInferencePipeline:
+    """Assemble the full system (used by examples/ and benchmarks/)."""
+    import jax.numpy as jnp
+    from repro.configs.swin_t_detection import CONFIG, reduced
+    from repro.models import swin as SW
+
+    system = system or calibrate()
+    cfg = cfg or (CONFIG if execute_model is False else reduced())
+    if params is None and execute_model:
+        params = SW.init(cfg, jax.random.PRNGKey(seed))
+    plan = SwinSplitPlan(cfg, params)
+    # accounting always uses the calibrated full-size system
+    codec = ActivationCodec()
+    controller = None
+    if adaptive:
+        est = train_estimator(system.channel, "kpm+spec", n_train=1024,
+                              steps=200, seed=seed)
+        prof = privacy_profile or {UE_ONLY: 0.0, SERVER_ONLY: 1.0,
+                                   "split1": 0.53, "split2": 0.42,
+                                   "split3": 0.33, "split4": 0.27}
+        controller = AdaptiveController(
+            system=system, estimator=est,
+            objective=objective or Objective(),
+            path=path or dupf_path(), privacy_profile=prof)
+    return SplitInferencePipeline(
+        plan=plan, system=system, codec=codec, controller=controller,
+        path=path or dupf_path(), seed=seed, execute_model=execute_model)

@@ -1,0 +1,206 @@
+"""Split plans: partition an unmodified model's forward pass at a boundary.
+
+The paper's mechanism, generalized over the model zoo:
+
+  * ``SwinSplitPlan`` -- the paper's own setting: split the Swin detection
+    backbone at {after patch-embed, after stage 1..4}; the FPN/RPN-style
+    head always runs server-side (paper §IV-A).  Execution options follow
+    paper Fig. 4: UE_ONLY, SPLIT(l), SERVER_ONLY.
+
+  * ``LMSplitPlan`` -- the technique applied to the assigned LM archs: the
+    residual stream is cut at a layer boundary; deployment-friendly
+    candidates default to quartile depths.  For SSM/hybrid archs the
+    recurrent state of head-side layers is part of the handoff payload
+    (accounted by ``payload_specs``) -- see DESIGN.md §Arch-applicability.
+
+No retraining, no weight surgery: head and tail tree-slice the *same*
+parameter pytree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.swin_t_detection import SwinConfig
+from repro.models import swin as SW
+from repro.models import transformer as T
+
+UE_ONLY = "ue_only"
+SERVER_ONLY = "server_only"
+
+
+def split_option(l: int) -> str:
+    return f"split{l}"
+
+
+# ===========================================================================
+# Swin (the paper's model)
+# ===========================================================================
+
+@dataclass
+class SwinSplitPlan:
+    cfg: SwinConfig
+    params: Any
+    ship_merged: bool = True          # False = beyond-paper payload opt
+    include_early_split: bool = False  # split0 (after patch embed, paper §IV-B)
+
+    @property
+    def options(self) -> List[str]:
+        splits = range(0 if self.include_early_split else 1, self.cfg.n_stages + 1)
+        return [UE_ONLY] + [split_option(l) for l in splits] + [SERVER_ONLY]
+
+    # -- execution -----------------------------------------------------------
+    def head(self, img, option: str):
+        """UE-side computation.  Returns (payload_tree_or_None, detections_or_None)."""
+        if option == UE_ONLY:
+            return None, SW.forward_full(self.cfg, self.params, img)
+        if option == SERVER_ONLY:
+            return {"img": img}, None
+        l = int(option.removeprefix("split"))
+        payload = SW.head_apply(self.cfg, self.params, img, l,
+                                ship_merged=self.ship_merged)
+        return payload, None
+
+    def tail(self, payload, option: str):
+        if option == SERVER_ONLY:
+            return SW.forward_full(self.cfg, self.params, payload["img"])
+        l = int(option.removeprefix("split"))
+        return SW.tail_apply(self.cfg, self.params, payload, l)
+
+    # -- accounting ----------------------------------------------------------
+    def head_flops(self, option: str) -> int:
+        if option == UE_ONLY:
+            return SW.total_flops(self.cfg)
+        if option == SERVER_ONLY:
+            return 0
+        return SW.head_flops(self.cfg, int(option.removeprefix("split")))
+
+    def tail_flops(self, option: str) -> int:
+        if option == UE_ONLY:
+            return 0
+        if option == SERVER_ONLY:
+            return SW.total_flops(self.cfg)
+        return SW.tail_flops(self.cfg, int(option.removeprefix("split")))
+
+    def payload_specs(self, option: str) -> List[Tuple[Tuple[int, ...], str]]:
+        """(shape, dtype) per shipped tensor, batch dim excluded."""
+        if option == UE_ONLY:
+            return []
+        if option == SERVER_ONLY:
+            return [((self.cfg.img_h, self.cfg.img_w, 3), "uint8")]
+        l = int(option.removeprefix("split"))
+        return [(s, self.cfg.dtype)
+                for s in SW.boundary_shapes(self.cfg, l,
+                                            ship_merged=self.ship_merged)]
+
+    def raw_payload_bytes(self, option: str, batch: int = 1) -> int:
+        return batch * sum(int(np.prod(s)) * np.dtype(d).itemsize
+                           for s, d in self.payload_specs(option))
+
+
+# ===========================================================================
+# LM-family archs (technique generalization)
+# ===========================================================================
+
+def default_candidates(cfg: ModelConfig) -> Tuple[int, ...]:
+    n = cfg.n_layers
+    qs = sorted({min(max(1, round(n * q)), n - 1) for q in (0.25, 0.5, 0.75)})
+    return tuple(qs)
+
+
+@dataclass
+class LMSplitPlan:
+    cfg: ModelConfig
+    params: Any
+    candidates: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if not self.candidates:
+            self.candidates = default_candidates(self.cfg)
+
+    @property
+    def options(self) -> List[str]:
+        return ([UE_ONLY] + [split_option(l) for l in self.candidates]
+                + [SERVER_ONLY])
+
+    # -- execution (prefill-style single-shot inference) ---------------------
+    def head(self, batch, option: str):
+        cfg = self.cfg
+        if option == UE_ONLY:
+            h = T.embed_inputs(cfg, self.params, batch)
+            B, S = h.shape[:2]
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            h, _, _ = T.forward_slice(cfg, self.params, h, pos, 0, cfg.n_layers)
+            return None, self._finish(h)
+        if option == SERVER_ONLY:
+            return dict(batch), None
+        l = int(option.removeprefix("split"))
+        h = T.embed_inputs(cfg, self.params, batch)
+        B, S = h.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h, _, _ = T.forward_slice(cfg, self.params, h, pos, 0, l)
+        return {"h": h}, None
+
+    def tail(self, payload, option: str):
+        cfg = self.cfg
+        if option == SERVER_ONLY:
+            batch = payload
+            h = T.embed_inputs(cfg, self.params, batch)
+            B, S = h.shape[:2]
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            h, _, _ = T.forward_slice(cfg, self.params, h, pos, 0, cfg.n_layers)
+            return self._finish(h)
+        l = int(option.removeprefix("split"))
+        h = payload["h"]
+        B, S = h.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h, _, _ = T.forward_slice(cfg, self.params, h, pos, l, cfg.n_layers)
+        return self._finish(h)
+
+    def _finish(self, h):
+        from repro.models.layers import rms_norm
+        h = rms_norm(h, self.params["final_norm"], self.cfg.norm_eps)
+        return T.unembed(self.cfg, self.params, h[:, -1:])
+
+    # -- accounting ----------------------------------------------------------
+    def _layer_flops(self) -> float:
+        from repro.configs.base import count_active_params
+        # 6ND per token per full model -> 2ND forward; per layer share
+        n_active = count_active_params(self.cfg)
+        return 2.0 * n_active / self.cfg.n_layers
+
+    def head_flops(self, option: str, n_tokens: int) -> float:
+        if option == UE_ONLY:
+            return self._layer_flops() * self.cfg.n_layers * n_tokens
+        if option == SERVER_ONLY:
+            return 0.0
+        l = int(option.removeprefix("split"))
+        return self._layer_flops() * l * n_tokens
+
+    def tail_flops(self, option: str, n_tokens: int) -> float:
+        total = self._layer_flops() * self.cfg.n_layers * n_tokens
+        return total - self.head_flops(option, n_tokens)
+
+    def payload_specs(self, option: str, seq_len: int,
+                      include_state: bool = False):
+        cfg = self.cfg
+        if option == UE_ONLY:
+            return []
+        if option == SERVER_ONLY:
+            return [((seq_len,), "int32")]
+        specs = [((seq_len, cfg.d_model), cfg.dtype)]
+        if include_state and cfg.family in ("ssm", "hybrid"):
+            l = int(option.removeprefix("split"))
+            # recurrent state of head-side layers ships on split move
+            di = cfg.ssm_expand * cfg.d_model
+            if cfg.family == "ssm":
+                hd = di // cfg.n_heads
+                specs.append(((l, cfg.n_heads, hd, hd), "float32"))   # mLSTM C
+            else:
+                specs.append(((l, di, cfg.ssm_state), "float32"))     # mamba h
+        return specs

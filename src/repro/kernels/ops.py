@@ -1,0 +1,79 @@
+"""Public kernel entry points.
+
+Each op dispatches to the Pallas TPU kernel (interpret=True when no TPU is
+present, so the same code validates on CPU) and pads inputs to
+hardware-aligned tiles.  ``ref.py`` holds the pure-jnp oracles the tests
+compare against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import quant as _quant
+from repro.kernels import flash_attention as _fa
+from repro.kernels import decode_attention as _da
+from repro.kernels import window_attention as _wa
+
+
+@functools.cache
+def on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+# -- quant -------------------------------------------------------------------
+
+def quantize(x, block: int = 8192):
+    """Per-block absmax INT8 quant.  Returns (q (nb, block) int8, scales, n)."""
+    return _quant.quant_pallas(x, block=block, interpret=_interpret())
+
+
+def dequantize(q, scales, n, shape, dtype=jnp.float32):
+    return _quant.dequant_pallas(q, scales, n, shape, dtype,
+                                 interpret=_interpret())
+
+
+# -- attention ----------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128):
+    return _fa.flash_attention_pallas(q, k, v, causal=causal,
+                                      block_q=block_q, block_kv=block_kv,
+                                      interpret=_interpret())
+
+
+def decode_attention(q, k, v, kv_len, *, block_kv: int = 512):
+    return _da.decode_attention_pallas(q, k, v, kv_len, block_kv=block_kv,
+                                       interpret=_interpret())
+
+
+def window_attention(q, k, v, bias, mask=None):
+    """Swin windowed attention with padding to TPU tiles.
+
+    q,k,v: (nB, w2, nh, hd); bias: (nh, w2, w2); mask: (nB, w2, w2) bool
+    or None.  Pads w2 -> multiple of 64 and masks the padded tokens.
+    """
+    nB, w2, nh, hd = q.shape
+    W2P = -(-w2 // 64) * 64
+    pad = W2P - w2
+    if mask is None:
+        mask = jnp.ones((nB, w2, w2), bool)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad), (0, pad)))
+        # padded queries attend to themselves only (keeps softmax finite)
+        eye = jnp.eye(W2P, dtype=bool)[None]
+        mask = mask | (eye & (jnp.arange(W2P) >= w2)[None, :, None])
+    out = _wa.window_attention_pallas(q, k, v, bias.astype(jnp.float32),
+                                      mask.astype(jnp.int8),
+                                      interpret=_interpret())
+    return out[:, :w2]

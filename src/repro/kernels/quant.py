@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: per-block absmax INT8 quantization (+ dequant).
+
+This is step (1) of the paper's activation-compression pipeline
+(FP32 -> INT8 before zlib).  It is also reused by the distributed-training
+int8 gradient compressor (optim/compress.py).
+
+TPU adaptation: the GPU version is a trivial elementwise pass; on TPU we
+tile the flattened tensor into (rows=8k, lanes=128)-aligned VMEM blocks so
+the VPU reduces absmax over a (BLOCK_ROWS, 128) tile per grid step, then
+rescales in-register and emits int8.  One grid dimension, no DMA stalls:
+block i streams HBM->VMEM while block i-1 computes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_MAX = 127.0
+LANES = 128
+BLOCK_ROWS = 64          # (64, 128) fp32 tile = 32 KiB VMEM per buffer
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                  # (BLOCK_ROWS, LANES)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.where(absmax > 0, absmax / INT8_MAX, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[0] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0]
+
+
+def quant_pallas(x, *, block: int = BLOCK_ROWS * LANES, interpret: bool = True):
+    """x: arbitrary shape.  Returns (q int8 (nb, block), scales (nb,), n)."""
+    assert block % LANES == 0
+    rows = block // LANES
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    nb = flat.shape[0] // block
+    xb = flat.reshape(nb * rows, LANES)
+
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((rows, LANES), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb * rows, LANES), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb)
+    return q.reshape(nb, block), s, n
+
+
+def dequant_pallas(q, s, n, shape, dtype=jnp.float32, *, interpret: bool = True):
+    """Inverse of quant_pallas."""
+    nb, block = q.shape
+    rows = block // LANES
+    qb = q.reshape(nb * rows, LANES)
+    o = pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(qb, s)
+    return o.reshape(-1)[:n].reshape(shape).astype(dtype)

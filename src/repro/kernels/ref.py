@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel.  Tests sweep shapes/dtypes and
+assert_allclose kernel outputs against these."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+# -- quant ------------------------------------------------------------------
+
+def quant_ref(x, block: int = 1024):
+    """Per-block absmax INT8 quantization.  x: any shape, flattened.
+
+    Returns (q int8 (n_blocks, block), scales f32 (n_blocks,), orig_size).
+    """
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    scale = jnp.where(absmax > 0, absmax / INT8_MAX, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -INT8_MAX, INT8_MAX)
+    return q.astype(jnp.int8), scale, n
+
+
+def dequant_ref(q, scale, n, shape, dtype=jnp.float32):
+    x = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    return x.reshape(shape).astype(dtype)
+
+
+# -- flash attention (causal GQA) --------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        sliding_window: int = 0):
+    """q: (B,S,H,hd); k,v: (B,S,KV,hd).  fp32 math."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qg = q.astype(jnp.float32).reshape(B, Sq, KV, G, hd)
+    logits = jnp.einsum("bqngd,bknd->bngqk", qg, k.astype(jnp.float32))
+    logits = logits / math.sqrt(hd)
+    q_pos = jnp.arange(Sq) + (Skv - Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if sliding_window:
+        mask &= k_pos[None, :] > q_pos[:, None] - sliding_window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngqk,bknd->bqngd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# -- decode attention ---------------------------------------------------------
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: (B,1,H,hd); k,v: (B,S,KV,hd); kv_len: (B,) valid lengths."""
+    B, _, H, hd = q.shape
+    _, S, KV, _ = k.shape
+    G = H // KV
+    qg = q.astype(jnp.float32).reshape(B, KV, G, hd)
+    logits = jnp.einsum("bngd,bknd->bngk", qg, k.astype(jnp.float32))
+    logits = logits / math.sqrt(hd)
+    mask = jnp.arange(S)[None] < kv_len[:, None]              # (B,S)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngk,bknd->bngd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# -- swin window attention ----------------------------------------------------
+
+def window_attention_ref(q, k, v, bias, mask=None):
+    """q,k,v: (nB, w2, nh, hd); bias: (nh, w2, w2); mask: (nB, w2, w2) bool."""
+    nB, w2, nh, hd = q.shape
+    logits = jnp.einsum("nqhd,nkhd->nhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    logits = logits + bias[None].astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask[:, None], logits, -1e9)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("nhqk,nkhd->nqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

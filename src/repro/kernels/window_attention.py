@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: Swin shifted-window attention.
+
+The paper's backbone hot-spot.  TPU adaptation (DESIGN.md §2): a CUDA Swin
+kernel maps one window to a thread block; on TPU we instead pad the window
+token count w^2 (49) up to the sublane multiple (64) and make the grid
+(window-batch, heads) -- every grid cell computes one window's full
+(w2 x w2) attention in VMEM with a single pair of MXU matmuls, with the
+relative-position bias and the shifted-window region mask fused into the
+logits (no HBM round-trip for the bias).
+
+Inputs are pre-padded by ops.window_attention: q,k,v (nB, W2P, nh, hd),
+bias (nh, W2P, W2P), mask (nB, W2P, W2P) int8 (1 = attend).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _window_kernel(q_ref, k_ref, v_ref, b_ref, m_ref, o_ref, *, sm_scale):
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * sm_scale     # (W2P, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (W2P, W2P)
+    s = s + b_ref[0].astype(jnp.float32)
+    s = jnp.where(m_ref[0] > 0, s, NEG_INF)
+    m = s.max(axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / p.sum(axis=1, keepdims=True)
+    o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+
+
+def window_attention_pallas(q, k, v, bias, mask, *, interpret: bool = True):
+    """q,k,v: (nB, W2P, nh, hd); bias: (nh, W2P, W2P);
+    mask: (nB, W2P, W2P) int8.  W2P and hd should be 64/128-aligned
+    (ops.py pads).  Returns (nB, W2P, nh, hd)."""
+    nB, W2P, nh, hd = q.shape
+    kernel = functools.partial(_window_kernel, sm_scale=1.0 / math.sqrt(hd))
+    return pl.pallas_call(
+        kernel,
+        grid=(nB, nh),
+        in_specs=[
+            pl.BlockSpec((1, W2P, 1, hd), lambda n, h: (n, 0, h, 0)),
+            pl.BlockSpec((1, W2P, 1, hd), lambda n, h: (n, 0, h, 0)),
+            pl.BlockSpec((1, W2P, 1, hd), lambda n, h: (n, 0, h, 0)),
+            pl.BlockSpec((1, W2P, W2P), lambda n, h: (h, 0, 0)),
+            pl.BlockSpec((1, W2P, W2P), lambda n, h: (n, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, W2P, 1, hd), lambda n, h: (n, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((nB, W2P, nh, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v, bias, mask)

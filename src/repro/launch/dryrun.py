@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any other import: jax locks the device count on first
+#   backend initialization.  Do not move; do not set this flag globally.
+
+# Multi-pod dry-run: prove the distribution config is coherent.
+#
+# For every (architecture x input shape x mesh) cell:
+#     jax.jit(step, in_shardings, out_shardings).lower(...).compile()
+# must succeed, and we record memory_analysis(), cost_analysis() and the
+# collective schedule parsed from the compiled HLO -- the §Roofline inputs.
+#
+# Usage:
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both \
+#         --out results/dryrun.json
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+#         --shape train_4k --mesh single
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# collective-schedule parser (HLO text -> bytes on the wire per chip)
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(f32|f16|bf16|s32|s8|u32|s64|u8|pred|f64)\[([0-9,]*)\]")
+_BYTES = {"f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "s64": 8, "pred": 1, "f64": 8}
+# ring-algorithm wire factor per byte of (per-shard) operand
+_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+_COLL_RE = re.compile(
+    r"^\s*(?:[%\w.-]+)\s*=\s*((?:\([^)]*\)|\S+))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)",
+    re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum output-shape bytes per collective kind.
+
+    Post-SPMD HLO shapes are PER-SHARD, so 'bytes' here is per-chip wire
+    traffic after applying the ring factor (all-reduce moves ~2x its shard
+    bytes per chip; gather/scatter/permute ~1x).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _FACTOR}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.groups()
+        if kind == "all-reduce" and _shape_bytes(type_str) <= 64:
+            # scalar loss/metric reductions -- negligible, but counted
+            pass
+        b = _shape_bytes(type_str)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += int(_FACTOR[kind] * b)
+    out["total_bytes"] = int(sum(v["bytes"] for k, v in out.items()
+                                 if isinstance(v, dict)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             grad_accum: int = 1, seq_shard: bool = True,
+             fsdp: bool = True, keep_hlo: bool = False,
+             hlo_dir: str = "results/hlo", tag: str = "") -> Dict[str, Any]:
+    import jax
+    from repro.configs import get_config, SHAPES_BY_NAME
+    from repro.configs.base import count_params, count_active_params
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.sharding import ShardingRules
+    from repro.launch.steps import build_step
+
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    cell: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "status": "UNKNOWN",
+        "grad_accum": grad_accum, "seq_shard": seq_shard, "fsdp": fsdp,
+    }
+    if shape.name == "long_500k" and not cfg.sub_quadratic():
+        cell["status"] = "SKIP"
+        cell["reason"] = ("full-attention arch at 524k decode is the "
+                         "quadratic regime the assignment excludes "
+                         "(DESIGN.md §4)")
+        return cell
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rules = ShardingRules(fsdp=fsdp)
+        kw: Dict[str, Any] = {"rules": rules}
+        if shape.kind == "train":
+            kw.update(grad_accum=grad_accum, seq_shard=seq_shard)
+        built = build_step(cfg, mesh, shape, **kw)
+        with mesh:
+            lowered = built.lower()
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        n_dev = mesh.devices.size
+        hlo = compiled.as_text()
+        from repro.launch.hlo_cost import analyze
+        loop_aware = analyze(hlo)
+        cell.update(
+            status="OK",
+            compile_s=round(time.time() - t0, 1),
+            n_devices=int(n_dev),
+            params=int(count_params(cfg)),
+            active_params=int(count_active_params(cfg)),
+            tokens=int(shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)),
+            # loop-aware per-device costs (launch/hlo_cost.py); xla_* are the
+            # raw cost_analysis numbers (while bodies counted once)
+            flops=float(loop_aware["flops"]),
+            xla_flops=float(cost.get("flops", -1.0)),
+            xla_bytes_accessed=float(cost.get("bytes accessed", -1.0)),
+            memory={
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", -1)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", -1)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", -1)),
+                "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", -1)),
+            },
+            collectives=loop_aware,
+            hlo_bytes=len(hlo),
+        )
+        # always persist the (gzipped) HLO: analyzer improvements and the
+        # §Perf loop re-read it without recompiling
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        gz = os.path.join(hlo_dir,
+                          f"{arch}_{shape_name}_{cell['mesh']}{tag}.hlo.gz")
+        with gzip.open(gz, "wt") as f:
+            f.write(hlo)
+        cell["hlo_gz"] = gz
+    except Exception as e:  # a failure here is a bug in our system
+        cell["status"] = "FAIL"
+        cell["error"] = f"{type(e).__name__}: {e}"
+        cell["traceback"] = traceback.format_exc()[-2000:]
+        cell["compile_s"] = round(time.time() - t0, 1)
+    return cell
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--hlo-dir", default="results/hlo")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already OK/SKIP in --out")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="re-run the HLO analyzer on stored .hlo.gz files "
+                         "(no recompilation)")
+    args = ap.parse_args(argv)
+
+    if args.reanalyze:
+        import gzip
+        from repro.launch.hlo_cost import analyze
+        with open(args.out) as f:
+            results = json.load(f)
+        for c in results:
+            if c.get("status") == "OK" and c.get("hlo_gz") and \
+               os.path.exists(c["hlo_gz"]):
+                with gzip.open(c["hlo_gz"], "rt") as f:
+                    la = analyze(f.read())
+                c["collectives"] = la
+                c["flops"] = float(la["flops"])
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"reanalyzed {args.out}")
+        return 0
+
+    from repro.configs import ARCH_IDS, get_config
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    prior: Dict[str, Dict] = {}
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            for c in json.load(f):
+                prior[(c["arch"], c["shape"], c["mesh"])] = c
+
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([s.name for s in cfg.shapes()] + (
+            ["long_500k"] if not cfg.sub_quadratic() else []))
+        if args.shape != "all":
+            shapes = [args.shape]
+        for shape_name in shapes:
+            for mp in meshes:
+                key = (arch, shape_name, "2x16x16" if mp else "16x16")
+                if key in prior and prior[key]["status"] in ("OK", "SKIP"):
+                    results.append(prior[key])
+                    continue
+                cell = run_cell(arch, shape_name, mp,
+                                grad_accum=args.grad_accum,
+                                seq_shard=not args.no_seq_shard,
+                                fsdp=not args.no_fsdp,
+                                keep_hlo=args.keep_hlo,
+                                hlo_dir=args.hlo_dir)
+                results.append(cell)
+                print(f"[{cell['status']:4s}] {arch:24s} {shape_name:12s} "
+                      f"{cell['mesh']:8s} t={cell.get('compile_s', 0):6.1f}s "
+                      f"{cell.get('error', '')[:90]}", flush=True)
+        # incremental write (a crash keeps partial results)
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    ok = sum(1 for c in results if c["status"] == "OK")
+    skip = sum(1 for c in results if c["status"] == "SKIP")
+    fail = sum(1 for c in results if c["status"] == "FAIL")
+    print(f"\ndry-run: {ok} OK, {skip} SKIP, {fail} FAIL "
+          f"-> {args.out}")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

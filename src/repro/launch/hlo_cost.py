@@ -1,0 +1,470 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, which
+undercounts scanned-layer models by orders of magnitude (a 32-layer scan
+contributes 1/32 of its true FLOPs).  This module re-derives per-device
+FLOPs and collective wire bytes from the optimized HLO text, multiplying
+loop bodies by their ``known_trip_count`` backend annotation.
+
+Costs (per device, post-SPMD shapes):
+  dot          2 * out_elems * prod(contracting dims)
+  convolution  2 * out_elems * prod(kernel spatial) * in_features/groups
+  elementwise  out_elems            (VPU ops; negligible but counted)
+  reduce       operand elems
+  all-reduce   2 * shape_bytes      (bidirectional ring)
+  all-gather   out_bytes            (ring, (n-1)/n ~ 1)
+  reduce-scatter  in_bytes
+  all-to-all / collective-permute   shape_bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_BYTES = {"f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "s16": 2, "u16": 2, "s64": 8, "u64": 8, "pred": 1,
+          "f64": 8, "c64": 8, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+def _parse_params(args: str) -> Dict[str, str]:
+    """Split 'a: f32[64,256], b: (f32[2], s32[])' at depth-0 commas (commas
+    inside brackets are part of the shape)."""
+    out: Dict[str, str] = {}
+    depth = 0
+    cur: List[str] = []
+    parts: List[str] = []
+    for ch in args:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    for part in parts:
+        if ":" in part:
+            name, t = part.split(":", 1)
+            out[name.strip().lstrip("%")] = t.strip()
+    return out
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"(?:true|false)_computation=%?([\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_WINDOW_RE = re.compile(r"window=\{[^}]*size=([0-9x]+)")
+_GROUPS_RE = re.compile(r"feature_group_count=(\d+)")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "tanh", "rsqrt", "sqrt", "log",
+    "log-plus-one", "negate", "abs", "cosine", "sine", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "sign", "atan2", "erf",
+    "logistic", "cbrt",
+}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def shape_elems(type_str: str) -> int:
+    tot = 0
+    for _, dims in shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n
+    return tot
+
+
+def shape_bytes(type_str: str) -> int:
+    tot = 0
+    for dt, dims in shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n * _BYTES[dt]
+    return tot
+
+
+@dataclass
+class Cost:
+    dot_flops: float = 0.0        # MXU work (dot/conv)
+    ew_flops: float = 0.0         # VPU work (elementwise/reduce)
+    hbm_bytes: float = 0.0        # operand+output bytes of top-level ops
+    cond_hbm_bytes: float = 0.0   # hbm bytes inside conditional branches:
+                                  # on TPU these are the flash-attention
+                                  # tiles the Pallas kernel keeps in VMEM
+    cond_dot_flops: float = 0.0   # dot flops inside conditionals (band-skip
+                                  # runs ~the causal fraction at runtime)
+    coll_bytes: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_count: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.ew_flops
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.ew_flops += other.ew_flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.cond_hbm_bytes += other.cond_hbm_bytes * mult
+        self.cond_dot_flops += other.cond_dot_flops * mult
+        for k in COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+            self.coll_count[k] += other.coll_count[k] * mult
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    def add_as_cond(self, other: "Cost", mult: float = 1.0):
+        """Like add(), but all of other's HBM traffic lands in the
+        conditional bucket (worst-branch accounting)."""
+        self.dot_flops += other.dot_flops * mult
+        self.ew_flops += other.ew_flops * mult
+        self.cond_dot_flops += (other.dot_flops + other.cond_dot_flops) * mult
+        self.cond_hbm_bytes += (other.hbm_bytes + other.cond_hbm_bytes) * mult
+        for k in COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+            self.coll_count[k] += other.coll_count[k] * mult
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "dot_flops": self.dot_flops,
+            "ew_flops": self.ew_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "cond_hbm_bytes": self.cond_hbm_bytes,
+            "cond_dot_flops": self.cond_dot_flops,
+            "collective_bytes": {k: v for k, v in self.coll_bytes.items()},
+            "collective_count": {k: v for k, v in self.coll_count.items()},
+            "total_collective_bytes": self.total_coll_bytes,
+        }
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str
+    operands: List[str]
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[_Op]] = {}
+        self.params: Dict[str, Dict[str, str]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._cost_cache: Dict[str, Cost] = {}
+
+    # -- parsing -------------------------------------------------------------
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _HDR_RE.match(line.strip())
+                if m and ("ENTRY" in line or line.strip().startswith("%")):
+                    name, args, _ = m.groups()
+                    cur = name
+                    self.computations[cur] = []
+                    self.params[cur] = _parse_params(args)
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = name
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, type_str, kind, rest = m.groups()
+            # operand names: %foo references before the closing paren
+            depth = 1
+            args_str = []
+            for ch in rest:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                args_str.append(ch)
+            operands = re.findall(r"%([\w.\-]+)", "".join(args_str))
+            self.computations[cur].append(
+                _Op(name, type_str, kind, rest, operands))
+
+    def _type_of(self, comp: str, name: str) -> Optional[str]:
+        if name in self.params.get(comp, {}):
+            return self.params[comp][name]
+        for op in self.computations.get(comp, []):
+            if op.name == name:
+                return op.type_str
+        return None
+
+    # -- costing ---------------------------------------------------------------
+    # HBM traffic model: XLA materializes buffers at top-level op boundaries
+    # (fusions are the traffic units) -- so bytes = operand+output bytes of
+    # every non-trivial op OUTSIDE fused computations.  Ops inside a fusion
+    # body contribute flops only.
+    _NO_BYTES = {"tuple", "get-tuple-element", "parameter", "constant",
+                 "bitcast", "while", "conditional", "call", "after-all",
+                 "optimization-barrier", "partition-id", "replica-id",
+                 "reshape", "iota"}
+
+    def _fused_has(self, op: "_Op", kind: str) -> bool:
+        m = _CALLS_RE.search(op.rest)
+        if not m:
+            return False
+        return any(o.kind == kind for o in self.computations.get(m.group(1), []))
+
+    def _operand_bytes(self, comp: str, op: "_Op"):
+        out = []
+        seen = set()
+        for nm in op.operands:
+            if nm in seen:
+                continue
+            seen.add(nm)
+            t = self._type_of(comp, nm)
+            if t:
+                out.append((float(shape_bytes(t)), t))
+        return out
+
+    def _op_bytes(self, comp: str, op: "_Op") -> float:
+        """HBM traffic of one top-level op.  In-place updates (scan carries,
+        cache writes) touch only the updated region, not the whole buffer --
+        XLA aliases them -- so dynamic-update-slice (bare or fused) charges
+        the update size; gathers charge the gathered rows."""
+        k = op.kind
+        if k in self._NO_BYTES:
+            return 0.0
+        out_b = float(shape_bytes(op.type_str))
+        ops_b = self._operand_bytes(comp, op)
+        if k == "dynamic-update-slice":
+            return 2.0 * (ops_b[1][0] if len(ops_b) > 1 else out_b)
+        if k in ("dynamic-slice", "gather"):
+            return 2.0 * out_b
+        if k == "scatter":
+            upd = ops_b[2][0] if len(ops_b) > 2 else out_b
+            return 3.0 * upd
+        if k == "fusion" and self._fused_has(op, "dynamic-update-slice"):
+            # in-place fusion: drop the aliased full-size operand/output;
+            # traffic ~ the other operands (update data) read + written
+            others = [b for b, t in ops_b if b < out_b * 0.99]
+            return 2.0 * sum(others) if others else out_b
+        if k == "fusion" and (self._fused_has(op, "dynamic-slice")
+                              or self._fused_has(op, "gather")):
+            # slicing fusion: reads only the slice (~= output), not the
+            # full sliced operand (scan xs indexing, cache reads)
+            small = [b for b, t in ops_b if b <= out_b * 1.01]
+            return 2.0 * out_b + sum(small)
+        return out_b + sum(b for b, _ in ops_b)
+
+    def cost_of(self, comp: str, in_fusion: bool = False) -> Cost:
+        key = (comp, in_fusion)
+        if key in self._cost_cache:
+            return self._cost_cache[key]
+        total = Cost()
+        self._cost_cache[key] = total      # break cycles defensively
+        for op in self.computations.get(comp, []):
+            k = op.kind
+            if not in_fusion:
+                total.hbm_bytes += self._op_bytes(comp, op)
+            if k == "dot":
+                out = shape_elems(op.type_str)
+                cdims = _LHS_C_RE.search(op.rest)
+                contract = 1
+                if cdims and op.operands:
+                    lhs_t = self._type_of(comp, op.operands[0])
+                    if lhs_t:
+                        dims = shape_dims(lhs_t)
+                        if dims:
+                            _, ds = dims[0]
+                            for ci in cdims.group(1).split(","):
+                                if ci and int(ci) < len(ds):
+                                    contract *= ds[int(ci)]
+                total.dot_flops += 2.0 * out * contract
+            elif k == "convolution":
+                out = shape_elems(op.type_str)
+                win = _WINDOW_RE.search(op.rest)
+                ksz = 1
+                if win:
+                    for d in win.group(1).split("x"):
+                        ksz *= int(d)
+                in_feat = 1
+                if len(op.operands) >= 2:
+                    rhs_t = self._type_of(comp, op.operands[1])
+                    if rhs_t:
+                        dims = shape_dims(rhs_t)[0][1]
+                        # kernel elems / spatial = in*out features; out is in
+                        # the output shape already
+                        kelems = 1
+                        for d in dims:
+                            kelems *= d
+                        out_feat = shape_dims(op.type_str)[0][1][-1] if shape_dims(op.type_str) else 1
+                        in_feat = max(kelems // max(ksz, 1) // max(out_feat, 1), 1)
+                g = _GROUPS_RE.search(op.rest)
+                groups = int(g.group(1)) if g else 1
+                total.dot_flops += 2.0 * out * ksz * in_feat / groups
+            elif k in ELEMENTWISE:
+                total.ew_flops += shape_elems(op.type_str)
+            elif k == "reduce":
+                if op.operands:
+                    t = self._type_of(comp, op.operands[0])
+                    total.ew_flops += shape_elems(t) if t else shape_elems(op.type_str)
+            elif k in COLLECTIVES:
+                if k == "all-reduce":
+                    b = 2.0 * shape_bytes(op.type_str)
+                elif k == "reduce-scatter":
+                    t = (self._type_of(comp, op.operands[0])
+                         if op.operands else None)
+                    b = float(shape_bytes(t) if t else shape_bytes(op.type_str))
+                else:
+                    b = float(shape_bytes(op.type_str))
+                total.coll_bytes[k] += b
+                total.coll_count[k] += 1
+            # nested computations
+            if k == "while":
+                body = _BODY_RE.search(op.rest)
+                cond = _COND_RE.search(op.rest)
+                trip = _TRIP_RE.search(op.rest)
+                n = int(trip.group(1)) if trip else 1
+                if body:
+                    total.add(self.cost_of(body.group(1), in_fusion), n)
+                if cond:
+                    total.add(self.cost_of(cond.group(1), in_fusion), n)
+            elif k == "conditional":
+                branches = _BRANCHES_RE.findall(op.rest) or []
+                names = []
+                for b in branches:
+                    names += re.findall(r"%?([\w.\-]+)", b)
+                names += _TF_RE.findall(op.rest)
+                if names:
+                    worst = max(
+                        (self.cost_of(n, in_fusion).hbm_bytes
+                         + self.cost_of(n, in_fusion).cond_hbm_bytes, n)
+                        for n in names)[1]
+                    total.add_as_cond(self.cost_of(worst, in_fusion))
+            elif k == "fusion":
+                for cm in _CALLS_RE.finditer(op.rest):
+                    total.add(self.cost_of(cm.group(1), True))
+            else:
+                for cm in _CALLS_RE.finditer(op.rest):
+                    total.add(self.cost_of(cm.group(1), in_fusion))
+        self._cost_cache[key] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+def top_ops(hlo_text: str, k: int = 25) -> List[Dict]:
+    """Rank individual HLO ops by loop-aware HBM bytes / flops / collective
+    bytes -- the §Perf profiling view ('where does the dominant term go')."""
+    mod = HloModule(hlo_text)
+    rows: List[Dict] = []
+
+    def walk(comp: str, mult: float, in_fusion: bool):
+        for op in mod.computations.get(comp, []):
+            kind = op.kind
+            entry = {"op": f"{comp}/{op.name}", "kind": kind, "mult": mult,
+                     "bytes": 0.0, "flops": 0.0, "coll": 0.0,
+                     "shape": op.type_str[:48]}
+            if not in_fusion:
+                entry["bytes"] = mod._op_bytes(comp, op) * mult
+            if kind == "fusion":
+                m = _CALLS_RE.search(op.rest)
+                if m:
+                    entry["flops"] = mod.cost_of(m.group(1), True).flops * mult
+            elif kind == "dot":
+                out_e = shape_elems(op.type_str)
+                contract = 1
+                cd = _LHS_C_RE.search(op.rest)
+                if cd and op.operands:
+                    lt = mod._type_of(comp, op.operands[0])
+                    if lt and shape_dims(lt):
+                        _, ds = shape_dims(lt)[0]
+                        for ci in cd.group(1).split(","):
+                            if ci and int(ci) < len(ds):
+                                contract *= ds[int(ci)]
+                entry["flops"] = 2.0 * out_e * contract * mult
+            if kind in COLLECTIVES:
+                if kind == "all-reduce":
+                    entry["coll"] = 2.0 * shape_bytes(op.type_str) * mult
+                elif kind == "reduce-scatter":
+                    t = (mod._type_of(comp, op.operands[0])
+                         if op.operands else None)
+                    entry["coll"] = float(shape_bytes(t) if t else
+                                          shape_bytes(op.type_str)) * mult
+                else:
+                    entry["coll"] = float(shape_bytes(op.type_str)) * mult
+            if entry["bytes"] or entry["coll"] or entry["flops"]:
+                rows.append(entry)
+            # recurse
+            if kind == "while":
+                body = _BODY_RE.search(op.rest)
+                trip = _TRIP_RE.search(op.rest)
+                n = int(trip.group(1)) if trip else 1
+                if body:
+                    walk(body.group(1), mult * n, in_fusion)
+            elif kind == "conditional":
+                names = []
+                for b in _BRANCHES_RE.findall(op.rest) or []:
+                    names += re.findall(r"%?([\w.\-]+)", b)
+                names += _TF_RE.findall(op.rest)
+                if names:
+                    worst = max((mod.cost_of(n, in_fusion).hbm_bytes, n)
+                                for n in names)[1]
+                    walk(worst, mult, in_fusion)
+            elif kind == "fusion":
+                pass        # flops already attributed to the fusion op
+            else:
+                for cm in _CALLS_RE.finditer(op.rest):
+                    walk(cm.group(1), mult, in_fusion)
+
+    walk(mod.entry, 1.0, False)
+    return rows
+
+
+def top_table(hlo_text: str, key: str = "bytes", k: int = 20) -> str:
+    rows = sorted(top_ops(hlo_text), key=lambda r: -r[key])[:k]
+    out = [f"{'bytes/GB':>9s} {'coll/GB':>9s} {'mult':>7s} {'kind':18s} op"]
+    for r in rows:
+        out.append(f"{r['bytes']/1e9:9.2f} {r['coll']/1e9:9.2f} "
+                   f"{r['mult']:7.0f} {r['kind']:18s} "
+                   f"{r['op'][:70]} {r['shape']}")
+    return "\n".join(out)
+
+
+def analyze(hlo_text: str) -> Dict:
+    mod = HloModule(hlo_text)
+    cost = mod.entry_cost()
+    # remat / redundancy fingerprint: duplicate metadata op_names
+    dup = len(re.findall(r"/rematted_computation/", hlo_text))
+    out = cost.as_dict()
+    out["n_computations"] = len(mod.computations)
+    out["remat_sites"] = dup
+    return out

@@ -1,0 +1,50 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state -- the dry-run must set XLA_FLAGS
+before anything initializes the backend.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e production layout: 16x16 chips per pod; 2 pods when multi_pod.
+
+    Uses the first prod(shape) devices so a 512-device host platform can
+    build both the single-pod (256) and multi-pod (512) meshes.
+    """
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "the dry-run sets --xla_force_host_platform_device_count=512")
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever this host has -- used by smoke tests and examples."""
+    import jax
+    devices = jax.devices()
+    n = len(devices)
+    mp = model_parallel if n % model_parallel == 0 else 1
+    dev_array = np.asarray(devices).reshape(n // mp, mp)
+    return jax.sharding.Mesh(dev_array, ("data", "model"))
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# -- hardware constants (TPU v5e; §Roofline) ---------------------------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,189 @@
+"""Logical-axis sharding rules engine (MaxText-style).
+
+Params carry *logical axis names* (models' ``*_spec`` trees); rules map
+logical -> mesh axes with divisibility fallback to replication.  The same
+engine shards optimizer state (same spec as params), decode caches
+(heuristic by dim size) and activations (residual-stream constraints).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+# logical axis -> preferred mesh axes, in priority order.  FSDP = "embed"
+# over the data axes; TP = heads/mlp/vocab over "model".
+DEFAULT_RULES: Dict[Optional[str], Tuple[str, ...]] = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert_mlp": ("model",),
+    "inner": ("model",),         # SSM expanded dim
+    "inner_out": ("model",),
+    "embed": ("data",),          # FSDP shard of the non-TP dim
+    "experts": (),               # EP fallback (40/64 don't divide 16)
+    "kv_lora": (),
+    "layers": (),                # scan dim stays unsharded
+    "head_dim": (),
+    "conv": (),
+    "state": (),
+    None: (),
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: Dict[Optional[str], Tuple[str, ...]] = field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+    fsdp: bool = True            # False -> params replicated over data
+
+    def mesh_axes_for(self, logical: Optional[str]) -> Tuple[str, ...]:
+        axes = self.rules.get(logical, ())
+        if not self.fsdp and axes == ("data",):
+            return ()
+        return axes
+
+    def pspec(self, spec: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+              mesh: Mesh) -> P:
+        """Map one leaf's logical spec to a PartitionSpec with divisibility
+        fallback; each mesh axis used at most once per array."""
+        used = set()
+        out = []
+        for logical, dim in zip(spec, shape):
+            placed = None
+            for ax in self.mesh_axes_for(logical):
+                if ax in used or ax not in mesh.axis_names:
+                    continue
+                if dim % mesh.shape[ax] == 0:
+                    placed = ax
+                    used.add(ax)
+                    break
+            out.append(placed)
+        return P(*out)
+
+
+def fit_pspec(mesh: Mesh, pspec: P, shape: Tuple[int, ...]) -> P:
+    """Drop mesh axes whose product does not divide the dim size (output
+    shardings must be even; uneven intermediates are avoided too)."""
+    out = []
+    for i, entry in enumerate(pspec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep = []
+        prod = 1
+        for a in axes:
+            if shape[i] % (prod * mesh.shape[a]) == 0:
+                keep.append(a)
+                prod *= mesh.shape[a]
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def param_shardings(rules: ShardingRules, spec_tree, abstract_params,
+                    mesh: Mesh):
+    """NamedSharding tree for params (spec tree mirrors the param tree)."""
+    def one(spec, leaf):
+        spec = tuple(spec)
+        assert len(spec) == leaf.ndim, f"spec {spec} vs shape {leaf.shape}"
+        return NamedSharding(mesh, rules.pspec(spec, leaf.shape, mesh))
+    return jax.tree.map(one, spec_tree, abstract_params,
+                        is_leaf=lambda s: isinstance(s, tuple))
+
+
+def opt_state_shardings(rules: ShardingRules, spec_tree, abstract_opt, mesh):
+    """AdamW state: m/v mirror params; step is replicated."""
+    from repro.optim.adamw import AdamWState
+    rep = NamedSharding(mesh, P())
+    m = param_shardings(rules, spec_tree, abstract_opt.m, mesh)
+    v = param_shardings(rules, spec_tree, abstract_opt.v, mesh)
+    return AdamWState(step=rep, m=m, v=v)
+
+
+def batch_shardings(mesh: Mesh, abstract_batch):
+    """Input batches: dim 0 over the batch axes, rest replicated."""
+    ba = batch_axes(mesh)
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if leaf.shape[0] % int(np.prod([mesh.shape[a] for a in ba])) == 0:
+            return NamedSharding(mesh, P(ba))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, abstract_batch)
+
+
+def cache_shardings(mesh: Mesh, abstract_caches):
+    """Decode caches.  Heuristic per leaf (leading dim = stacked layers):
+    shard the batch dim over the batch axes when divisible; shard the
+    largest remaining dim over "model"; if batch could not shard (e.g.
+    long_500k B=1), give the largest dim the data axes too -- the 500k KV
+    stream is then fully distributed and softmax lowers to the
+    local-partials + all-reduce flash-decode pattern."""
+    ba = batch_axes(mesh)
+    n_batch = int(np.prod([mesh.shape[a] for a in ba]))
+
+    def one(leaf):
+        if leaf.ndim <= 2:
+            return NamedSharding(mesh, P())
+        spec: list = [None] * leaf.ndim
+        batch_ok = leaf.shape[1] % n_batch == 0
+        if batch_ok:
+            spec[1] = ba
+        rest = [(d, i) for i, d in enumerate(leaf.shape) if i >= 2]
+        rest.sort(reverse=True)
+        for d, i in rest:
+            if d % mesh.shape["model"] == 0:
+                if not batch_ok:
+                    total = mesh.shape["model"] * n_batch
+                    if d % total == 0:
+                        spec[i] = ba + ("model",)
+                    else:
+                        spec[i] = ("model",)
+                else:
+                    spec[i] = ("model",)
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, abstract_caches)
+
+
+@dataclass(frozen=True)
+class ActivationShardings:
+    """with_sharding_constraint specs used inside the model."""
+    residual: Optional[Any] = None     # (B, S, d) between blocks
+    logits: Optional[Any] = None       # (B, S, vocab) in the CE chunk
+    mesh: Optional[Mesh] = None
+
+    def attn_entry(self, x):
+        """Megatron SP->TP transition: gather the seq dim ONCE per layer at
+        the attention entry (q/k/v (B,S,H,hd), heads TP-sharded when they
+        divide).  Without this the partitioner reshards every flash block
+        step inside the kv scan (§Perf iteration 4)."""
+        if self.mesh is None:
+            return x
+        ba = batch_axes(self.mesh)
+        spec = fit_pspec(self.mesh, P(ba, None, "model", None), x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, batch: int, seq: int, d_model: int, *,
+                 seq_shard: bool = True,
+                 decode: bool = False) -> "ActivationShardings":
+        ba = batch_axes(mesh)
+        if decode or not seq_shard:
+            res = P(ba, None, None)
+        else:
+            # sequence parallelism: the residual stream between blocks is
+            # sharded over "model" on the seq dim (Megatron-SP analogue)
+            res = P(ba, "model", None)
+        res = fit_pspec(mesh, res, (batch, seq, d_model))
+        return ActivationShardings(residual=NamedSharding(mesh, res),
+                                   mesh=mesh)

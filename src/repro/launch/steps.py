@@ -1,0 +1,180 @@
+"""Step builders: train_step / prefill / decode_step with full sharding
+annotations.  Single source of truth for the launcher, the dry-run, the
+examples and the integration tests.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.launch.mesh import batch_axes
+from repro.launch.sharding import (ActivationShardings, ShardingRules,
+                                   batch_shardings, cache_shardings,
+                                   opt_state_shardings, param_shardings)
+from repro.models.registry import get_model
+from repro.optim.adamw import AdamW, AdamWState
+
+
+def logits_pspec(mesh: Mesh, cfg: ModelConfig, batch: int, seq: int = 1):
+    from repro.launch.sharding import fit_pspec
+    ba = batch_axes(mesh)
+    if cfg.n_codebooks:
+        spec = P(ba, None, None, "model")
+        shape = (batch, seq, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        spec = P(ba, None, "model")
+        shape = (batch, seq, cfg.vocab_size)
+    return NamedSharding(mesh, fit_pspec(mesh, spec, shape))
+
+
+@dataclass
+class BuiltStep:
+    fn: Any
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings)
+
+    def lower(self):
+        return self.jit().lower(*self.abstract_args)
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
+                     rules: Optional[ShardingRules] = None,
+                     opt: Optional[AdamW] = None, grad_accum: int = 1,
+                     seq_shard: bool = True) -> BuiltStep:
+    rules = rules or ShardingRules()
+    opt = opt or AdamW()
+    model = get_model(cfg)
+    aps = model.abstract_params()
+    spec = model.spec()
+    pshard = param_shardings(rules, spec, aps, mesh)
+    aos = jax.eval_shape(opt.init, aps)
+    oshard = opt_state_shardings(rules, spec, aos, mesh)
+    abatch = model.train_inputs(shape)
+    bshard = batch_shardings(mesh, abatch)
+    b_micro = shape.global_batch // grad_accum
+    act = ActivationShardings.for_mesh(mesh, b_micro, shape.seq_len,
+                                       cfg.d_model, seq_shard=seq_shard)
+    lsh = logits_pspec(mesh, cfg, b_micro, min(cfg.loss_chunk, shape.seq_len))
+
+    def loss_fn(p, b):
+        return model.loss_fn(p, b, act_sharding=act,
+                             logits_sharding=lsh)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((grad_accum, a.shape[0] // grad_accum)
+                                    + a.shape[1:]), batch)
+            g0 = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params)
+
+            def acc(carry, mbatch):
+                tot, g = carry
+                l, gi = jax.value_and_grad(loss_fn)(params, mbatch)
+                g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g, gi)
+                return (tot + l, g), None
+
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), g0), mb)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        params, opt_state, metrics = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    rep = NamedSharding(mesh, P())
+    return BuiltStep(
+        fn=train_step,
+        abstract_args=(aps, aos, abatch),
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard,
+                       {"loss": rep, "grad_norm": rep, "lr": rep}),
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def build_prefill(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
+                  rules: Optional[ShardingRules] = None,
+                  max_len: Optional[int] = None) -> BuiltStep:
+    rules = rules or ShardingRules()
+    model = get_model(cfg)
+    aps = model.abstract_params()
+    pshard = param_shardings(rules, model.spec(), aps, mesh)
+    abatch = model.prefill_inputs(shape)
+    bshard = batch_shardings(mesh, abatch)
+    max_len = max_len or shape.seq_len
+    acache = model.abstract_cache(shape.global_batch, max_len)
+    cshard = cache_shardings(mesh, acache)
+    lsh = logits_pspec(mesh, cfg, shape.global_batch, 1)
+
+    def prefill(params, batch):
+        logits, caches = model.prefill(params, batch, max_len)
+        return logits, caches
+
+    return BuiltStep(
+        fn=prefill,
+        abstract_args=(aps, abatch),
+        in_shardings=(pshard, bshard),
+        out_shardings=(lsh, cshard),
+    )
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
+                      rules: Optional[ShardingRules] = None) -> BuiltStep:
+    """serve_step: one new token against a seq_len KV cache."""
+    rules = rules or ShardingRules()
+    model = get_model(cfg)
+    aps = model.abstract_params()
+    pshard = param_shardings(rules, model.spec(), aps, mesh)
+    abatch = model.decode_inputs(shape)
+    bshard = batch_shardings(mesh, abatch)
+    acache = model.abstract_cache(shape.global_batch, shape.seq_len)
+    cshard = cache_shardings(mesh, acache)
+    act = ActivationShardings.for_mesh(mesh, shape.global_batch, 1,
+                                       cfg.d_model, decode=True)
+    lsh = logits_pspec(mesh, cfg, shape.global_batch, 1)
+    aidx = jax.ShapeDtypeStruct((), jnp.int32)
+    rep = NamedSharding(mesh, P())
+
+    def decode_step(params, caches, batch, cache_index):
+        logits, new_caches = model.decode_step(
+            params, caches, batch, cache_index,
+            act_sharding=act, logits_sharding=lsh)
+        return logits, new_caches
+
+    return BuiltStep(
+        fn=decode_step,
+        abstract_args=(aps, acache, abatch, aidx),
+        in_shardings=(pshard, cshard, bshard, rep),
+        out_shardings=(lsh, cshard),
+    )
+
+
+BUILDERS = {
+    "train": build_train_step,
+    "prefill": build_prefill,
+    "decode": build_decode_step,
+}
+
+
+def build_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape, **kw) -> BuiltStep:
+    return BUILDERS[shape.kind](cfg, mesh, shape, **kw)

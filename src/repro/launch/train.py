@@ -1,0 +1,101 @@
+"""Training driver: sharded train loop with async checkpointing, restart,
+and straggler/failure monitoring hooks.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --reduced --steps 200 --seq 128 --batch 8 --ckpt /tmp/ckpt
+
+On a real pod this runs under the production mesh; on CPU it uses the host
+mesh with the same code path (the examples call it with --reduced).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, get_reduced_config
+    from repro.configs.base import InputShape
+    from repro.checkpoint import store as CK
+    from repro.data.tokens import TokenStream
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.sharding import ShardingRules
+    from repro.launch.steps import build_train_step
+    from repro.models.registry import get_model
+    from repro.optim.adamw import AdamW
+    from repro.runtime.failures import StragglerMonitor
+
+    cfg = (get_reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    model = get_model(cfg)
+    mesh = make_host_mesh()
+    shape = InputShape("cli", seq_len=args.seq, global_batch=args.batch,
+                       kind="train")
+    opt = AdamW(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                total_steps=args.steps)
+    built = build_train_step(cfg, mesh, shape, opt=opt,
+                             grad_accum=args.grad_accum,
+                             rules=ShardingRules())
+    step_fn = built.jit()
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    start = 0
+    ckpt: Optional[CK.AsyncCheckpointer] = None
+    if args.ckpt:
+        ckpt = CK.AsyncCheckpointer(args.ckpt)
+        if args.resume:
+            last = CK.latest_step(args.ckpt)
+            if last is not None:
+                like = jax.eval_shape(lambda: (params, opt_state))
+                params, opt_state = CK.restore(args.ckpt, last, like)
+                start = last
+                print(f"resumed from step {last}")
+
+    stream = TokenStream(cfg, seq_len=args.seq, batch=args.batch, seed=0)
+    straggler = StragglerMonitor(n_workers=1)
+    t_start = time.time()
+    with mesh:
+        for step, batch in zip(range(start, args.steps), stream):
+            t0 = time.perf_counter()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            dt = time.perf_counter() - t0
+            straggler.record(0, dt)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} {dt * 1e3:.0f} ms",
+                      flush=True)
+            if ckpt and step > start and step % args.ckpt_every == 0:
+                ckpt.save_async((params, opt_state), step)
+    if ckpt:
+        ckpt.save_async((params, opt_state), args.steps)
+        ckpt.wait()
+        print(f"final checkpoint: {ckpt.last_path}")
+    toks = args.steps * args.batch * args.seq
+    print(f"done: {toks / (time.time() - t_start):.0f} tok/s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

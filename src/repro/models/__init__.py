@@ -1,0 +1,1 @@
+from repro.models.registry import LMModel, get_model  # noqa: F401

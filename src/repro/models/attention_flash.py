@@ -1,0 +1,118 @@
+"""Blockwise causal attention, XLA path (TPU target runs kernels/flash).
+
+Structure (PERF-ITERATION A1, EXPERIMENTS.md §Perf): outer ``lax.scan``
+over q blocks, inner ``lax.scan`` over kv blocks with a ``lax.cond``
+band-skip.  The online-softmax state is a small per-q-block carry
+(B, bq, KV, G[, hd]) and the output is emitted through the scan's native
+stacking -- no full-buffer dynamic_update_slice carries.  The previous
+flat (q,kv)-pair scan carried the whole (B, nq, bq, ...) accumulator and
+dynamic-indexed it each step, which the SPMD partitioner could only
+handle by all-gathering the accumulator EVERY STEP (~20 TB of ICI traffic
+per device for a 48L/32k prefill; see the baseline profile).
+
+lax.cond skips out-of-band blocks at runtime (exact-causal compute); the
+static HLO contains both branches, so analyzer-reported attention FLOPs
+are a ~2x upper bound for causal runs (noted in §Roofline).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _ei(subs, *args):
+    return jnp.einsum(subs, *args, preferred_element_type=jnp.float32)
+
+
+def flash_attention_xla(q, k, v, *, causal: bool = True,
+                        sliding_window: int = 0, block_q: int = 512,
+                        block_kv: int = 512, logit_softcap: float = 0.0):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd); GQA via H % KV == 0.
+    Returns (B, Sq, H, vd)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    vd = v.shape[-1]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    nq = -(-Sq // block_q)
+    nk = -(-Skv // block_kv)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_kv - Skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    qb = q.reshape(B, nq, block_q, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nk, block_kv, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, block_kv, KV, vd).transpose(1, 0, 2, 3, 4)
+
+    scale = 1.0 / math.sqrt(hd)
+    offset = Skv - Sq                      # query i sees kv <= i + offset
+
+    def q_block(qi, qblk):
+        q_lo = qi * block_q + offset
+
+        def kv_step(carry, inp):
+            kj, kblk, vblk = inp
+            k_lo = kj * block_kv
+            in_band = jnp.asarray(True)
+            if causal:
+                in_band &= k_lo <= q_lo + block_q - 1
+            if sliding_window:
+                in_band &= k_lo + block_kv - 1 > q_lo - sliding_window
+
+            def compute(carry):
+                m, l, acc = carry
+                s = _ei("bqngd,bknd->bqngk", qblk, kblk) * scale
+                if logit_softcap:
+                    s = jnp.tanh(s / logit_softcap) * logit_softcap
+                q_pos = q_lo + jax.lax.broadcasted_iota(
+                    jnp.int32, (block_q, block_kv), 0)
+                k_pos = k_lo + jax.lax.broadcasted_iota(
+                    jnp.int32, (block_q, block_kv), 1)
+                mask = k_pos < Skv
+                if causal:
+                    mask &= k_pos <= q_pos
+                if sliding_window:
+                    mask &= k_pos > q_pos - sliding_window
+                s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + p.sum(axis=-1)
+                acc_new = acc * corr[..., None] + _ei("bqngk,bknd->bqngd",
+                                                      p, vblk)
+                return m_new, l_new, acc_new
+
+            carry = jax.lax.cond(in_band, compute, lambda c: c, carry)
+            return carry, None
+
+        # PERF-ITERATION B3: rematerialize each kv step in backward.  The
+        # (bq x bk) probability tile is recomputed from the (already
+        # resident) q/k blocks instead of being written to + read from HBM
+        # (the f32 p saves were ~12 TB/step on qwen3-4b train_4k).  Costs
+        # one extra QK^T per kv block in bwd; compute is 40x under the
+        # memory bound here.
+        kv_step = jax.checkpoint(kv_step)
+
+        m0 = jnp.full((B, block_q, KV, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, block_q, KV, G), jnp.float32)
+        a0 = jnp.zeros((B, block_q, KV, G, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        # cast to io dtype BEFORE the outer scan stacks the block (halves
+        # the stacked buffer + downstream gathers; PERF-ITERATION 2)
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    _, outs = jax.lax.scan(
+        lambda c, x: (c, q_block(*x)), None, (jnp.arange(nq), qb))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * block_q, H, vd)
+    return out[:, :Sq].astype(q.dtype)

@@ -1,0 +1,455 @@
+"""Shared neural-net layers (pure JAX, functional, pytree params).
+
+Conventions:
+  - params are plain dicts of jnp arrays; a parallel "spec tree" of logical
+    axis-name tuples is produced by ``*_spec`` helpers for the sharding rules
+    engine (launch/sharding.py).
+  - activations flow in ``cfg.dtype`` (bf16 on TPU); softmax/norm statistics
+    in fp32; matmuls request fp32 accumulation via preferred_element_type.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense(x, w):
+    """Matmul with fp32 accumulation, output in x.dtype."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def einsum32(subs, *args, out_dtype=None):
+    out = jnp.einsum(subs, *args, preferred_element_type=jnp.float32)
+    if out_dtype is not None:
+        out = out.astype(out_dtype)
+    return out
+
+
+def init_dense(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))            # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                   # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (XLA paths; Pallas kernels in repro.kernels are the TPU target)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def flash_attention_xla(q, k, v, **kw):
+    """Blockwise causal attention (see models/attention_flash.py)."""
+    from repro.models.attention_flash import flash_attention_xla as _impl
+    return _impl(q, k, v, **kw)
+
+
+def plain_attention(q, k, v, *, causal=True, sliding_window: int = 0,
+                    logit_softcap: float = 0.0, kv_len=None,
+                    explicit_mask=None):
+    """Reference dense attention (used for small shapes / decode).
+
+    q: (B, Sq, H, hd); k,v: (B, Skv, KV, hd). kv_len: optional (B,) valid
+    lengths (decode with pre-allocated cache).  explicit_mask: optional
+    (Skv,) or (Sq, Skv) bool mask (ring-buffer decode).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    logits = einsum32("bqngd,bknd->bngqk", qg, k) / math.sqrt(hd)
+    if logit_softcap:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+    q_pos = jnp.arange(Sq) + (Skv - Sq if kv_len is None else 0)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal and kv_len is None and explicit_mask is None:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+        if sliding_window:
+            mask &= k_pos[None, :] > q_pos[:, None] - sliding_window
+    if explicit_mask is not None:
+        mask &= jnp.broadcast_to(explicit_mask, (Sq, Skv))
+    mask = jnp.broadcast_to(mask, (B, 1, 1, Sq, Skv))
+    if kv_len is not None:
+        valid = k_pos[None, :] < kv_len[:, None]            # (B, Skv)
+        mask = mask & valid[:, None, None, None, :]
+        if sliding_window:
+            swm = k_pos[None, :] > (kv_len[:, None] - 1 - sliding_window)
+            mask = mask & swm[:, None, None, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = einsum32("bngqk,bknd->bqngd", p, v, out_dtype=q.dtype)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (init / spec / apply)
+# ---------------------------------------------------------------------------
+
+def attn_init(cfg: ModelConfig, key):
+    dt = dtype_of(cfg)
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": init_dense(ks[0], (d, H, hd), dt),
+        "wk": init_dense(ks[1], (d, KV, hd), dt),
+        "wv": init_dense(ks[2], (d, KV, hd), dt),
+        "wo": init_dense(ks[3], (H, hd, d), dt, scale=1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def attn_spec(cfg: ModelConfig):
+    p = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ("head_dim",)
+        p["k_norm"] = ("head_dim",)
+    return p
+
+
+def cache_attention(q, ck, cv, *, kv_len=None, explicit_mask=None,
+                    logit_softcap: float = 0.0):
+    """Decode attention against a KV-MAJOR cache (PERF-ITERATION C1).
+
+    q: (B, Sq, H, hd); ck, cv: (B, KV, Sc, hd).  The (B, KV, S, hd) layout
+    contracts hd (minor-most on both sides) without materializing a
+    transposed copy of the cache each step -- the baseline (B, S, KV, hd)
+    layout cost a full f32 cache transpose per decoded token (67 of 88 GB
+    of HBM traffic on granite decode_32k; EXPERIMENTS.md §Perf).
+    """
+    B, Sq, H, hd = q.shape
+    _, KV, Sc, _ = ck.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    logits = einsum32("bqngd,bnkd->bngqk", qg, ck) / math.sqrt(hd)
+    if logit_softcap:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+    k_pos = jnp.arange(Sc)
+    mask = jnp.ones((B, 1, 1, Sq, Sc), bool)
+    if explicit_mask is not None:
+        mask = mask & jnp.broadcast_to(explicit_mask, (Sq, Sc))
+    if kv_len is not None:
+        mask = mask & (k_pos[None, :] < kv_len[:, None])[:, None, None, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = einsum32("bngqk,bnkd->bqngd", pr, cv, out_dtype=q.dtype)
+    return out.reshape(B, Sq, H, cv.shape[-1])
+
+
+def attn_apply(cfg: ModelConfig, p, x, positions, *, cache=None,
+               cache_index=None, sliding_window: int = 0, impl=None,
+               act=None):
+    """GQA attention.  cache: None (train/prefill-no-cache) or dict with
+    KV-major k/v (B, KV, S_cache, hd) updated at cache_index (decode).
+    Returns (out, new_kv) where new_kv is the (k, v) for cache construction.
+    """
+    B, S, d = x.shape
+    q = einsum32("bsd,dhk->bshk", x, p["wq"], out_dtype=x.dtype)
+    k = einsum32("bsd,dnk->bsnk", x, p["wk"], out_dtype=x.dtype)
+    v = einsum32("bsd,dnk->bsnk", x, p["wv"], out_dtype=x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if act is not None and cache is None:
+        # SP->TP: gather seq / shard heads once, BEFORE the flash block
+        # scans (otherwise the partitioner reshards every kv step)
+        q, k, v = act.attn_entry(q), act.attn_entry(k), act.attn_entry(v)
+
+    if cache is not None:
+        ck, cv = cache["k"], cache["v"]           # KV-major: (B, KV, Sc, hd)
+        Sc = ck.shape[2]
+        kt = k.transpose(0, 2, 1, 3).astype(ck.dtype)   # (B, KV, S, hd)
+        vt = v.transpose(0, 2, 1, 3).astype(cv.dtype)
+        if sliding_window and Sc == sliding_window:
+            # ring buffer: slot = pos % window; keys carry RoPE at their
+            # absolute positions, so relative attention is preserved.
+            slot = jnp.mod(cache_index, Sc)
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, kt, slot, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, vt, slot, axis=2)
+            valid = jnp.arange(Sc) <= cache_index      # all True once idx >= Sc-1
+            out = cache_attention(q, ck, cv, explicit_mask=valid,
+                                  logit_softcap=cfg.attn_logit_softcap)
+        else:
+            # global cache: write the new kv at cache_index, mask by length.
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, kt, cache_index, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, vt, cache_index, axis=2)
+            kv_len = jnp.full((B,), cache_index + S, jnp.int32)
+            out = cache_attention(q, ck, cv, kv_len=kv_len,
+                                  logit_softcap=cfg.attn_logit_softcap)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        use_flash = (impl or cfg.attn_impl) in ("xla", "pallas") and S > cfg.attn_block_q
+        if use_flash:
+            out = flash_attention_xla(
+                q, k, v, causal=True, sliding_window=sliding_window,
+                block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+                logit_softcap=cfg.attn_logit_softcap)
+        else:
+            out = plain_attention(q, k, v, causal=True,
+                                  sliding_window=sliding_window,
+                                  logit_softcap=cfg.attn_logit_softcap)
+        new_cache = {"k": k, "v": v}
+    y = einsum32("bshk,hkd->bsd", out, p["wo"], out_dtype=x.dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(cfg: ModelConfig, key):
+    dt = dtype_of(cfg)
+    d, H = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": init_dense(ks[0], (d, H, dn + dr), dt),
+        "w_dkv": init_dense(ks[1], (d, r + dr), dt),
+        "w_uk": init_dense(ks[2], (r, H, dn), dt),
+        "w_uv": init_dense(ks[3], (r, H, dv), dt),
+        "wo": init_dense(ks[4], (H, dv, d), dt, scale=1.0 / math.sqrt(H * dv)),
+        "kv_norm": jnp.ones((r,), dt),
+    }
+
+
+def mla_spec(cfg: ModelConfig):
+    return {
+        "wq": ("embed", "heads", "head_dim"),
+        "w_dkv": ("embed", "kv_lora"),
+        "w_uk": ("kv_lora", "heads", "head_dim"),
+        "w_uv": ("kv_lora", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+        "kv_norm": ("kv_lora",),
+    }
+
+
+def mla_apply(cfg: ModelConfig, p, x, positions, *, cache=None,
+              cache_index=None, act=None):
+    """MLA.  Cache stores only (latent, k_rope): rank-512 + 64 per token.
+
+    Prefill/train: materialize per-head K/V from the latent (standard form).
+    Decode: absorbed form -- q_nope is pushed through w_uk so attention runs
+    directly against the latent cache (DeepSeek-V2 inference trick).
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q = einsum32("bsd,dhk->bshk", x, p["wq"], out_dtype=x.dtype)   # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = einsum32("bsd,dr->bsr", x, p["w_dkv"], out_dtype=x.dtype)  # (B,S,r+dr)
+    latent, k_rope = dkv[..., :r], dkv[..., r:]
+    latent = rms_norm(latent, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]  # shared head
+
+    if cache is not None:
+        cl = jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], latent.astype(cache["latent"].dtype), cache_index, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), cache_index, axis=1)
+        Sc = cl.shape[1]
+        kv_len = cache_index + S
+        # absorbed attention: logits = q_nope W_uk . latent + q_rope . k_rope
+        q_abs = einsum32("bshk,rhk->bshr", q_nope, p["w_uk"])      # fp32
+        logits = einsum32("bshr,btr->bhst", q_abs.astype(x.dtype), cl)
+        logits = logits + einsum32("bshk,btk->bhst", q_rope, cr)
+        logits = logits * scale
+        mask = jnp.arange(Sc)[None, None, None, :] < kv_len
+        logits = jnp.where(mask, logits, NEG_INF)
+        pr = jax.nn.softmax(logits, axis=-1)
+        ctx = einsum32("bhst,btr->bshr", pr, cl)                   # (B,S,H,r) fp32
+        out = einsum32("bshr,rhv->bshv", ctx, p["w_uv"], out_dtype=x.dtype)
+        new_cache = {"latent": cl, "k_rope": cr}
+    else:
+        k_nope = einsum32("bsr,rhk->bshk", latent, p["w_uk"], out_dtype=x.dtype)
+        vv = einsum32("bsr,rhv->bshv", latent, p["w_uv"], out_dtype=x.dtype)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        if act is not None:
+            q_full = act.attn_entry(q_full)
+            k_full = act.attn_entry(k_full)
+            vv = act.attn_entry(vv)
+        if S > cfg.attn_block_q:
+            out = flash_attention_xla(q_full, k_full, vv, causal=True,
+                                      block_q=cfg.attn_block_q,
+                                      block_kv=cfg.attn_block_kv)
+        else:
+            out = plain_attention(q_full, k_full, vv, causal=True)
+        new_cache = {"latent": latent, "k_rope": k_rope}
+    y = einsum32("bshv,hvd->bsd", out, p["wo"], out_dtype=x.dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN: dense (SwiGLU) and MoE
+# ---------------------------------------------------------------------------
+
+def mlp_init(cfg: ModelConfig, key, d_ff=None):
+    dt = dtype_of(cfg)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(ks[0], (d, f), dt),
+        "w_up": init_dense(ks[1], (d, f), dt),
+        "w_down": init_dense(ks[2], (f, d), dt),
+    }
+
+
+def mlp_spec(cfg: ModelConfig):
+    return {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+            "w_down": ("mlp", "embed")}
+
+
+def mlp_apply(p, x):
+    h = jax.nn.silu(dense(x, p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    h = h * dense(x, p["w_up"])
+    return dense(h, p["w_down"])
+
+
+def moe_init(cfg: ModelConfig, key):
+    dt = dtype_of(cfg)
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": init_dense(ks[0], (d, E), jnp.float32),
+        "w_gate": init_dense(ks[1], (E, d, f), dt, scale=1.0 / math.sqrt(d)),
+        "w_up": init_dense(ks[2], (E, d, f), dt, scale=1.0 / math.sqrt(d)),
+        "w_down": init_dense(ks[3], (E, f, d), dt, scale=1.0 / math.sqrt(f)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(cfg, ks[4], d_ff=cfg.n_shared_experts * f)
+    return p
+
+
+def moe_spec(cfg: ModelConfig):
+    p = {
+        "router": ("embed", "experts"),
+        "w_gate": ("experts", "embed", "expert_mlp"),
+        "w_up": ("experts", "embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_spec(cfg)
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """Capacity-based top-k MoE with cumsum-position scatter dispatch.
+
+    Dispatch is computed per batch row so the scatter stays local under
+    batch sharding (no cross-device dispatch -> no all-to-all in HLO;
+    expert weights are TP-sharded on the hidden dim instead).
+    x: (B, S, d) -> (B, S, d).
+    """
+    B, S, d = x.shape
+    E, k, f = cfg.n_experts, cfg.moe_top_k, cfg.moe_d_ff
+    cap = int(S * k / E * cfg.moe_capacity_factor + 0.5)
+    cap = max(min(cap, S), 1)
+
+    router_logits = einsum32("bsd,de->bse", x, p["router"])        # fp32
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                        # (B,S,k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    idx_f = idx.reshape(B, S * k)                                   # (B, Sk)
+    onehot = jax.nn.one_hot(idx_f, E, dtype=jnp.int32)              # (B, Sk, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - 1                       # (B, Sk, E)
+    pos = jnp.take_along_axis(pos_in_e, idx_f[..., None], axis=-1)[..., 0]
+    keep = pos < cap                                                # (B, Sk)
+    slot = jnp.where(keep, idx_f * cap + pos, E * cap)              # overflow slot
+
+    xk = jnp.repeat(x, k, axis=1)                                   # (B, Sk, d)
+    buf = jnp.zeros((B, E * cap + 1, d), x.dtype)
+    buf = buf.at[jnp.arange(B)[:, None], slot].add(xk)
+    buf = buf[:, :-1].reshape(B, E, cap, d)
+
+    h = jax.nn.silu(einsum32("becd,edf->becf", buf, p["w_gate"]))
+    h = (h * einsum32("becd,edf->becf", buf, p["w_up"])).astype(x.dtype)
+    out_buf = einsum32("becf,efd->becd", h, p["w_down"], out_dtype=x.dtype)
+
+    out_flat = out_buf.reshape(B, E * cap, d)
+    gathered = jnp.take_along_axis(
+        out_flat, jnp.where(keep, slot, 0)[..., None], axis=1)      # (B, Sk, d)
+    gathered = gathered * (keep[..., None] * gate_vals.reshape(B, S * k)[..., None]).astype(x.dtype)
+    y = gathered.reshape(B, S, k, d).sum(axis=2)
+
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x)
+    aux = moe_load_balance_loss(cfg, router_logits)
+    return y, aux
+
+
+def moe_load_balance_loss(cfg: ModelConfig, router_logits):
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    frac = probs.mean(axis=(0, 1))
+    top1 = jax.nn.one_hot(jnp.argmax(probs, -1), cfg.n_experts).mean(axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac * top1)

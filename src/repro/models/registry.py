@@ -1,0 +1,101 @@
+"""Model registry: uniform API over every assigned architecture.
+
+``get_model(cfg)`` returns an ``LMModel`` exposing init/spec/loss/prefill/
+decode plus ``*_inputs`` ShapeDtypeStruct factories -- the single surface
+used by the launcher, the dry-run, the split-inference runtime and the
+tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.models import transformer as T
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclass(frozen=True)
+class LMModel:
+    cfg: ModelConfig
+
+    # -- parameters --------------------------------------------------------
+    def init(self, key):
+        return T.init(self.cfg, key)
+
+    def spec(self):
+        return T.spec(self.cfg)
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda k: T.init(self.cfg, k),
+                              jax.random.PRNGKey(0))
+
+    # -- steps --------------------------------------------------------------
+    def loss_fn(self, params, batch, **kw):
+        return T.loss_fn(self.cfg, params, batch, **kw)
+
+    def prefill(self, params, batch, max_len, **kw):
+        return T.prefill(self.cfg, params, batch, max_len, **kw)
+
+    def decode_step(self, params, caches, batch, cache_index, **kw):
+        return T.decode_step(self.cfg, params, caches, batch, cache_index, **kw)
+
+    def cache_init(self, B, max_len):
+        return T.cache_init(self.cfg, B, max_len)
+
+    def abstract_cache(self, B, max_len):
+        return jax.eval_shape(lambda: T.cache_init(self.cfg, B, max_len))
+
+    # -- input specs (ShapeDtypeStructs; weak-type-correct, no allocation) --
+    def train_inputs(self, shape: InputShape) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        batch: Dict[str, Any] = {}
+        if cfg.frontend == "audio_frames":
+            batch["frames"] = _sds((B, S, cfg.d_model), jnp.float32)
+            batch["labels"] = _sds((B, S, cfg.n_codebooks), jnp.int32)
+        elif cfg.frontend == "vision_patches":
+            s_txt = S - cfg.n_frontend_tokens
+            batch["patches"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+            batch["tokens"] = _sds((B, s_txt), jnp.int32)
+            batch["labels"] = _sds((B, S), jnp.int32)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32)
+            batch["labels"] = _sds((B, S), jnp.int32)
+        return batch
+
+    def prefill_inputs(self, shape: InputShape) -> Dict[str, Any]:
+        batch = self.train_inputs(shape)
+        batch.pop("labels")
+        return batch
+
+    def decode_inputs(self, shape: InputShape) -> Dict[str, Any]:
+        """One-token inputs for ``serve_step`` (cache passed separately)."""
+        cfg = self.cfg
+        B = shape.global_batch
+        if cfg.frontend == "audio_frames":
+            return {"tokens": _sds((B, 1, cfg.n_codebooks), jnp.int32)}
+        return {"tokens": _sds((B, 1), jnp.int32)}
+
+    def concrete(self, specs, key=None, vocab_clip: Optional[int] = None):
+        """Materialize ShapeDtypeStructs as random arrays (smoke tests)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        out = {}
+        for name, s in specs.items():
+            key, k = jax.random.split(key)
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                hi = vocab_clip or self.cfg.vocab_size
+                out[name] = jax.random.randint(k, s.shape, 0, hi, s.dtype)
+            else:
+                out[name] = jax.random.normal(k, s.shape, s.dtype)
+        return out
+
+
+def get_model(cfg: ModelConfig) -> LMModel:
+    return LMModel(cfg)

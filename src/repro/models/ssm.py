@@ -1,0 +1,443 @@
+"""Recurrent / state-space blocks: xLSTM (mLSTM + sLSTM) and Mamba-style
+selective SSM (used by the Hymba hybrid arch).
+
+All blocks follow the layers.py conventions: functional ``*_init`` /
+``*_spec`` / ``*_apply``; params are dicts of jnp arrays.  Every block has
+two execution forms:
+
+  - sequence form (train / prefill): chunkwise-parallel (mLSTM), full
+    associative scan (mamba) or time scan (sLSTM); returns final state.
+  - step form (decode): single-token recurrent update against a carried
+    state -- O(1) in sequence length, which is what makes the ``ssm`` and
+    ``hybrid`` archs eligible for the 500k-token decode shape.
+
+States are part of the decode cache, and -- per the paper's technique --
+part of the compressed split payload when the split point moves across an
+SSM block (see core/splitting.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dtype_of, init_dense, rms_norm, einsum32
+
+LOG_EPS = -30.0
+
+
+def _logsigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+def group_norm(x, scale, eps=1e-5):
+    """Per-head group norm over the last dim.  x: (..., nh, hd)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.square(xf - mu).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def causal_conv1d(x, w, cache=None):
+    """Depthwise causal conv.  x: (B, S, D); w: (K, D).
+
+    cache: optional (B, K-1, D) of trailing inputs from the previous call
+    (decode).  Returns (y, new_cache).
+    """
+    K = w.shape[0]
+    if cache is None:
+        ctx = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = sum(ctx[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_cache = ctx[:, -(K - 1):] if K > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return y.astype(x.dtype), new_cache
+
+
+# ===========================================================================
+# mLSTM (matrix-memory xLSTM cell)
+# ===========================================================================
+#
+# Recurrent form per head (hd = head dim), stabilizer m in log space:
+#   f~ = logsigmoid(f_raw), i~ = i_raw
+#   m_t = max(f~_t + m_{t-1}, i~_t)
+#   C_t = e^{f~_t+m_{t-1}-m_t} C_{t-1} + e^{i~_t-m_t} k_t v_t^T
+#   n_t = e^{f~_t+m_{t-1}-m_t} n_{t-1} + e^{i~_t-m_t} k_t
+#   h_t = C_t^T q_t / max(|n_t . q_t|, e^{-m_t}),   q scaled by hd^-0.5
+#
+# The chunkwise-parallel sequence form below is mathematically identical
+# (the stabilizer cancels between numerator and denominator) and is the
+# TPU-friendly layout: intra-chunk terms are (L x L) MXU matmuls, the
+# inter-chunk state is carried by a scan over chunks.
+
+def mlstm_cell_step(q, k, v, i_raw, f_raw, state):
+    """One decode step.  q,k,v: (B, nh, hd); i_raw,f_raw: (B, nh).
+
+    state: dict(C=(B,nh,hd,hd), n=(B,nh,hd), m=(B,nh)).
+    """
+    hd = q.shape[-1]
+    q = q.astype(jnp.float32) / math.sqrt(hd)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    logf = _logsigmoid(f_raw.astype(jnp.float32))
+    logi = i_raw.astype(jnp.float32)
+    m_prev, C_prev, n_prev = state["m"], state["C"], state["n"]
+    m_new = jnp.maximum(logf + m_prev, logi)
+    decay = jnp.exp(logf + m_prev - m_new)[..., None]
+    inp = jnp.exp(logi - m_new)[..., None]
+    C_new = C_prev * decay[..., None] + (inp[..., None] * k[..., :, None] * v[..., None, :])
+    n_new = n_prev * decay + inp * k
+    num = jnp.einsum("bnij,bni->bnj", C_new, q)
+    den = jnp.abs(jnp.einsum("bni,bni->bn", n_new, q))
+    den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    h = num / den
+    return h, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def mlstm_sequence(q, k, v, i_raw, f_raw, state=None, chunk: int = 64):
+    """Chunkwise-parallel mLSTM.  q,k,v: (B, S, nh, hd); gates (B, S, nh).
+
+    Returns (h: (B,S,nh,hd) float32, final_state).
+    """
+    B, S, nh, hd = q.shape
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, i_raw, f_raw = map(zpad, (q, k, v, i_raw, f_raw))
+        # padded steps must not perturb the carried state: input gate -> -inf
+        # (no write), forget gate -> +big (logsigmoid ~ 0, no decay).
+        i_raw = i_raw.at[:, S:].set(LOG_EPS * 10)
+        f_raw = f_raw.at[:, S:].set(30.0)
+    Sp = S + pad
+    nc = Sp // L
+
+    qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(B, nc, L, nh, hd)
+    kf = k.astype(jnp.float32).reshape(B, nc, L, nh, hd)
+    vf = v.astype(jnp.float32).reshape(B, nc, L, nh, hd)
+    logi = i_raw.astype(jnp.float32).reshape(B, nc, L, nh)
+    logf = _logsigmoid(f_raw.astype(jnp.float32)).reshape(B, nc, L, nh)
+
+    if state is None:
+        state = mlstm_state_init(B, nh, hd)
+
+    def chunk_body(carry, inp):
+        C_in, n_in, m_in = carry
+        qc, kc, vc, li, lf = inp  # (B, L, nh, *)
+        b = jnp.cumsum(lf, axis=1)                    # (B,L,nh) inclusive cumsum
+        a_t = b + m_in[:, None]                       # decay applied to C_in
+        # intra-chunk pairwise log weights D[t,s] = b_t - b_s + li_s  (s <= t)
+        D = b[:, :, None] - b[:, None, :] + li[:, None, :]           # (B,L,L,nh)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(tri[None, :, :, None], D, -jnp.inf)
+        m_intra = D.max(axis=2)                       # (B,L,nh)
+        m_t = jnp.maximum(a_t, m_intra)
+        m_t = jnp.maximum(m_t, -abs(LOG_EPS))         # keep denominators sane
+        # numerator / denominator
+        w_inter = jnp.exp(a_t - m_t)                  # (B,L,nh)
+        P = jnp.exp(D - m_t[:, :, None])              # (B,L,L,nh)
+        qk = jnp.einsum("blnd,bsnd->blsn", qc, kc)    # (B,L,L,nh)
+        num = jnp.einsum("blsn,bsnd->blnd", P * qk, vc)
+        num = num + w_inter[..., None] * jnp.einsum("bnij,blni->blnj", C_in, qc)
+        den = jnp.einsum("blsn,blsn->bln", P, qk)
+        den = den + w_inter * jnp.einsum("bni,blni->bln", n_in, qc)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h = num / den[..., None]
+        # state update to end of chunk
+        bL = b[:, -1]                                  # (B,nh) total log decay
+        m_out = jnp.maximum(bL + m_in, (bL[:, None] - b + li).max(axis=1))
+        w0 = jnp.exp(bL + m_in - m_out)
+        wt = jnp.exp(bL[:, None] - b + li - m_out[:, None])   # (B,L,nh)
+        C_out = C_in * w0[..., None, None] + jnp.einsum(
+            "blnd,blne->bnde", wt[..., None] * kc, vc)
+        n_out = n_in * w0[..., None] + jnp.einsum("blnd,bln->bnd", kc, wt)
+        return (C_out, n_out, m_out), h
+
+    inputs = tuple(a.swapaxes(0, 1) for a in (qf, kf, vf, logi, logf))
+    (C, n, m), hs = jax.lax.scan(
+        chunk_body, (state["C"], state["n"], state["m"]), inputs)
+    h = hs.swapaxes(0, 1).reshape(B, Sp, nh, hd)[:, :S]
+    return h, {"C": C, "n": n, "m": m}
+
+
+def mlstm_state_init(B, nh, hd, dtype=jnp.float32):
+    return {
+        "C": jnp.zeros((B, nh, hd, hd), dtype),
+        "n": jnp.zeros((B, nh, hd), dtype),
+        "m": jnp.full((B, nh), LOG_EPS, dtype),
+    }
+
+
+# --- mLSTM block (up-proj -> conv -> qkv/gates -> cell -> gated down-proj) --
+
+def mlstm_block_init(cfg: ModelConfig, key):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,), dt),
+        "w_up": init_dense(ks[0], (d, 2 * di), dt),
+        "conv_w": init_dense(ks[1], (cfg.ssm_conv, di), dt, scale=0.5),
+        "wq": init_dense(ks[2], (di, di), dt),
+        "wk": init_dense(ks[3], (di, di), dt),
+        "wv": init_dense(ks[4], (di, di), dt),
+        "w_if": init_dense(ks[5], (di, 2 * cfg.n_heads), jnp.float32),
+        "b_if": jnp.concatenate([
+            jnp.zeros((cfg.n_heads,), jnp.float32),           # input gate bias
+            jnp.linspace(3.0, 6.0, cfg.n_heads),              # forget bias (xLSTM init)
+        ]),
+        "gn": jnp.ones((cfg.n_heads, di // cfg.n_heads), dt),
+        "w_down": init_dense(ks[6], (di, d), dt, scale=1.0 / math.sqrt(di * 2 * cfg.n_layers)),
+    }
+
+
+def mlstm_block_spec(cfg: ModelConfig):
+    return {
+        "norm": ("embed",),
+        "w_up": ("embed", "inner"),
+        "conv_w": ("conv", "inner"),
+        "wq": ("inner", "inner_out"),
+        "wk": ("inner", "inner_out"),
+        "wv": ("inner", "inner_out"),
+        "w_if": ("inner", None),
+        "b_if": (None,),
+        "gn": ("heads", "head_dim"),
+        "w_down": ("inner", "embed"),
+    }
+
+
+def mlstm_block_apply(cfg: ModelConfig, p, x, *, cache=None):
+    """x: (B,S,d).  cache: None or dict(conv=..., state=...) for decode."""
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    di = cfg.ssm_expand * d
+    hd = di // nh
+    h_in = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = einsum32("bsd,de->bse", h_in, p["w_up"], out_dtype=x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_cache = None if cache is None else cache["conv"]
+    xc, new_conv = causal_conv1d(xm, p["conv_w"], conv_cache)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q = einsum32("bsd,de->bse", xc, p["wq"], out_dtype=x.dtype).reshape(B, S, nh, hd)
+    k = einsum32("bsd,de->bse", xc, p["wk"], out_dtype=x.dtype).reshape(B, S, nh, hd)
+    k = k / math.sqrt(hd)
+    v = einsum32("bsd,de->bse", xm, p["wv"], out_dtype=x.dtype).reshape(B, S, nh, hd)
+    gates = einsum32("bsd,dg->bsg", xm, p["w_if"]) + p["b_if"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)   # (B,S,nh) each
+
+    if cache is not None and S == 1:
+        h, new_state = mlstm_cell_step(
+            q[:, 0], k[:, 0], v[:, 0], i_raw[:, 0], f_raw[:, 0], cache["state"])
+        h = h[:, None]
+    else:
+        state = None if cache is None else cache["state"]
+        h, new_state = mlstm_sequence(q, k, v, i_raw, f_raw, state)
+    h = group_norm(h.astype(x.dtype), p["gn"], cfg.norm_eps).reshape(B, S, di)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = einsum32("bsd,de->bse", h, p["w_down"], out_dtype=x.dtype)
+    new_cache = {"conv": new_conv, "state": new_state}
+    return x + y, new_cache
+
+
+def mlstm_cache_init(cfg: ModelConfig, B, dtype=jnp.float32):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1, di), dtype),
+        "state": mlstm_state_init(B, cfg.n_heads, di // cfg.n_heads),
+    }
+
+
+# ===========================================================================
+# sLSTM (scalar-memory xLSTM cell, block-diagonal recurrence)
+# ===========================================================================
+
+def slstm_block_init(cfg: ModelConfig, key):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    f_up = int(d * 4 / 3)
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": jnp.ones((d,), dt),
+        "w_gates": init_dense(ks[0], (d, 4 * d), dt),          # i,f,z,o
+        "r_gates": init_dense(ks[1], (nh, hd, 4 * hd), dt,     # recurrent, per head
+                              scale=1.0 / math.sqrt(hd)),
+        "b_gates": jnp.concatenate([
+            jnp.zeros((d,), jnp.float32),
+            jnp.broadcast_to(jnp.linspace(3.0, 6.0, nh)[:, None], (nh, hd)).reshape(-1),
+            jnp.zeros((2 * d,), jnp.float32),
+        ]),
+        "gn": jnp.ones((nh, hd), dt),
+        "w_up1": init_dense(ks[2], (d, f_up), dt),
+        "w_up2": init_dense(ks[3], (d, f_up), dt),
+        "w_down": init_dense(ks[4], (f_up, d), dt, scale=1.0 / math.sqrt(f_up * 2 * cfg.n_layers)),
+    }
+
+
+def slstm_block_spec(cfg: ModelConfig):
+    return {
+        "norm": ("embed",),
+        "w_gates": ("embed", "inner"),
+        "r_gates": ("heads", "head_dim", None),
+        "b_gates": (None,),
+        "gn": ("heads", "head_dim"),
+        "w_up1": ("embed", "mlp"),
+        "w_up2": ("embed", "mlp"),
+        "w_down": ("mlp", "embed"),
+    }
+
+
+def _slstm_step(cfg, p, carry, wx_t):
+    """carry: (h, c, n, m) each (B, nh, hd); wx_t: (B, 4d) input preact."""
+    h, c, n, m = carry
+    B = h.shape[0]
+    nh, hd = h.shape[1], h.shape[2]
+    d = nh * hd
+    rec = jnp.einsum("bnh,nhg->bng", h.astype(jnp.float32),
+                     p["r_gates"].astype(jnp.float32))         # (B,nh,4hd)
+    # wx_t is (B, 4d) laid out [i(d), f(d), z(d), o(d)]; regroup per head.
+    wx_h = wx_t.reshape(B, 4, nh, hd).transpose(0, 2, 1, 3).reshape(B, nh, 4 * hd)
+    b_h = p["b_gates"].reshape(4, nh, hd).transpose(1, 0, 2).reshape(nh, 4 * hd)
+    pre = wx_h + rec + b_h
+    ii, ff, zz, oo = jnp.split(pre, 4, axis=-1)                # (B,nh,hd)
+    logf = _logsigmoid(ff)
+    m_new = jnp.maximum(logf + m, ii)
+    i_act = jnp.exp(ii - m_new)
+    f_act = jnp.exp(logf + m - m_new)
+    z_act = jnp.tanh(zz)
+    o_act = jax.nn.sigmoid(oo)
+    c_new = f_act * c + i_act * z_act
+    n_new = jnp.maximum(f_act * n + i_act, 1e-6)
+    h_new = o_act * (c_new / n_new)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_block_apply(cfg: ModelConfig, p, x, *, cache=None):
+    """x: (B,S,d); sequential scan over time (sLSTM is inherently serial)."""
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    h_in = rms_norm(x, p["norm"], cfg.norm_eps)
+    wx = einsum32("bsd,dg->bsg", h_in, p["w_gates"])           # (B,S,4d) fp32
+    if cache is None:
+        state = slstm_state_init(cfg, B)["state"]
+    else:
+        state = cache["state"]
+    carry = tuple(state[k] for k in ("h", "c", "n", "m"))
+    carry, hs = jax.lax.scan(
+        lambda cr, w: _slstm_step(cfg, p, cr, w), carry, wx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1)                                     # (B,S,nh,hd)
+    y = group_norm(hs.astype(x.dtype), p["gn"], cfg.norm_eps).reshape(B, S, d)
+    x = x + y
+    # post-FFN (GLU 4/3, xLSTM paper's sLSTM block)
+    hf = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = jax.nn.gelu(einsum32("bsd,df->bsf", hf, p["w_up1"])).astype(x.dtype)
+    up = up * einsum32("bsd,df->bsf", hf, p["w_up2"], out_dtype=x.dtype)
+    x = x + einsum32("bsf,fd->bsd", up, p["w_down"], out_dtype=x.dtype)
+    new_state = dict(zip(("h", "c", "n", "m"), carry))
+    return x, {"state": new_state}
+
+
+def slstm_state_init(cfg: ModelConfig, B):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    z = lambda: jnp.zeros((B, nh, hd), jnp.float32)
+    return {"state": {"h": z(), "c": z(), "n": z(),
+                      "m": jnp.full((B, nh, hd), LOG_EPS, jnp.float32)}}
+
+
+# ===========================================================================
+# Mamba-style selective SSM (Hymba's SSM heads)
+# ===========================================================================
+
+def mamba_init(cfg: ModelConfig, key, d_inner: Optional[int] = None):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    di = d_inner or cfg.ssm_expand * d
+    N = cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization of A
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "w_in": init_dense(ks[0], (d, 2 * di), dt),
+        "conv_w": init_dense(ks[1], (cfg.ssm_conv, di), dt, scale=0.5),
+        "w_x": init_dense(ks[2], (di, dt_rank + 2 * N), dt),
+        "w_dt": init_dense(ks[3], (dt_rank, di), jnp.float32),
+        "b_dt": jnp.log(jnp.expm1(  # softplus^-1 of dt in [1e-3, 1e-1]
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": init_dense(ks[5], (di, d), dt, scale=1.0 / math.sqrt(di * 2 * cfg.n_layers)),
+    }
+
+
+def mamba_spec(cfg: ModelConfig):
+    return {
+        "w_in": ("embed", "inner"),
+        "conv_w": ("conv", "inner"),
+        "w_x": ("inner", None),
+        "w_dt": (None, "inner_out"),
+        "b_dt": ("inner_out",),
+        "A_log": ("inner_out", "state"),
+        "D": ("inner_out",),
+        "w_out": ("inner", "embed"),
+    }
+
+
+def mamba_apply(cfg: ModelConfig, p, x, *, cache=None):
+    """Selective SSM.  x: (B,S,d) -> (B,S,d).  cache: dict(conv, state) or None.
+
+    Sequence form uses an associative scan over time (O(S log S) depth, exact).
+    """
+    B, S, d = x.shape
+    di = p["w_in"].shape[1] // 2
+    N = cfg.ssm_state
+    dt_rank = p["w_x"].shape[1] - 2 * N
+
+    up = einsum32("bsd,de->bse", x, p["w_in"], out_dtype=x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_cache = None if cache is None else cache["conv"]
+    u, new_conv = causal_conv1d(xm, p["conv_w"], conv_cache)
+    u = jax.nn.silu(u.astype(jnp.float32))                       # (B,S,di) fp32
+
+    xproj = einsum32("bsd,dr->bsr", u.astype(x.dtype), p["w_x"])  # fp32
+    dt_in, Bc, Cc = jnp.split(xproj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["w_dt"] + p["b_dt"])          # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                      # (di,N)
+    da = jnp.exp(dt[..., None] * A)                               # (B,S,di,N)
+    db = (dt * u)[..., None] * Bc[:, :, None, :]                  # (B,S,di,N)
+
+    if cache is not None and S == 1:
+        h = da[:, 0] * cache["state"] + db[:, 0]                  # (B,di,N)
+        y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None]
+        new_state = h
+    else:
+        def combine(a, b):
+            a1, b1 = a
+            a2, b2 = b
+            return a1 * a2, a2 * b1 + b2
+        init = cache["state"] if cache is not None else jnp.zeros((B, di, N), jnp.float32)
+        db = db.at[:, 0].add(da[:, 0] * init)
+        aa, hs = jax.lax.associative_scan(combine, (da, db), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cc)
+        new_state = hs[:, -1]
+    y = y + p["D"] * u
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = einsum32("bsd,de->bse", y.astype(x.dtype), p["w_out"], out_dtype=x.dtype)
+    return out, {"conv": new_conv, "state": new_state}
+
+
+def mamba_cache_init(cfg: ModelConfig, B, d_inner: Optional[int] = None):
+    di = d_inner or cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1, di), jnp.float32),
+        "state": jnp.zeros((B, di, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,520 @@
+"""Generic stage-structured decoder covering all assigned LM-family archs.
+
+One model definition handles dense / GQA / qk-norm / MoE / MLA / xLSTM /
+Mamba-hybrid / audio / VLM configs.  Layers are grouped into *runs* of
+identical block kind; each run's params are stacked and executed under
+``jax.lax.scan`` (bounded HLO size at any depth -- a 48L 26B config compiles
+the block body once per run).
+
+Runs are also the paper's split boundaries for LM archs: core/splitting.py
+partitions the forward pass at any layer index, and the residual-stream
+activation at that boundary is the compressed split payload.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.models import layers as L
+from repro.models import ssm as S
+
+# ---------------------------------------------------------------------------
+# layer plan: one LayerKind per layer; runs = maximal uniform groups
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LayerKind:
+    block: str = "attn_ffn"     # attn_ffn | mlstm | slstm | hymba
+    attn: str = "gqa"           # gqa | mla | none
+    ffn: str = "dense"          # dense | moe | none
+    sliding_window: int = 0     # 0 = global attention
+
+
+def layer_plan(cfg: ModelConfig) -> Tuple[LayerKind, ...]:
+    plan = []
+    for i in range(cfg.n_layers):
+        if cfg.family == "ssm":
+            plan.append(LayerKind(block="slstm" if i in cfg.slstm_positions
+                                  else "mlstm", attn="none", ffn="none"))
+        elif cfg.hybrid:
+            sw = 0 if i in cfg.global_attn_positions else cfg.sliding_window
+            plan.append(LayerKind(block="hymba", attn="gqa", ffn="dense",
+                                  sliding_window=sw))
+        else:
+            attn = "mla" if cfg.use_mla else "gqa"
+            ffn = ("moe" if (cfg.n_experts and i >= cfg.first_dense_layers)
+                   else "dense")
+            plan.append(LayerKind(attn=attn, ffn=ffn))
+    return tuple(plan)
+
+
+def layer_runs(cfg: ModelConfig) -> List[Tuple[LayerKind, int]]:
+    runs: List[Tuple[LayerKind, int]] = []
+    for kind in layer_plan(cfg):
+        if runs and runs[-1][0] == kind:
+            runs[-1] = (kind, runs[-1][1] + 1)
+        else:
+            runs.append((kind, 1))
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# block init / spec / apply (dispatch on LayerKind)
+# ---------------------------------------------------------------------------
+
+def block_init(cfg: ModelConfig, kind: LayerKind, key):
+    if kind.block == "mlstm":
+        return S.mlstm_block_init(cfg, key)
+    if kind.block == "slstm":
+        return S.slstm_block_init(cfg, key)
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), dt),
+                         "ln2": jnp.ones((cfg.d_model,), dt)}
+    p["attn"] = (L.mla_init(cfg, ks[0]) if kind.attn == "mla"
+                 else L.attn_init(cfg, ks[0]))
+    p["ffn"] = (L.moe_init(cfg, ks[1]) if kind.ffn == "moe"
+                else L.mlp_init(cfg, ks[1]))
+    if kind.block == "hymba":
+        p["mamba"] = S.mamba_init(cfg, ks[2])
+        p["norm_attn"] = jnp.ones((cfg.d_model,), dt)
+        p["norm_ssm"] = jnp.ones((cfg.d_model,), dt)
+        p["beta_attn"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["beta_ssm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return p
+
+
+def block_spec(cfg: ModelConfig, kind: LayerKind):
+    if kind.block == "mlstm":
+        return S.mlstm_block_spec(cfg)
+    if kind.block == "slstm":
+        return S.slstm_block_spec(cfg)
+    p: Dict[str, Any] = {"ln1": ("embed",), "ln2": ("embed",)}
+    p["attn"] = L.mla_spec(cfg) if kind.attn == "mla" else L.attn_spec(cfg)
+    p["ffn"] = L.moe_spec(cfg) if kind.ffn == "moe" else L.mlp_spec(cfg)
+    if kind.block == "hymba":
+        p["mamba"] = S.mamba_spec(cfg)
+        p["norm_attn"] = ("embed",)
+        p["norm_ssm"] = ("embed",)
+        p["beta_attn"] = ("embed",)
+        p["beta_ssm"] = ("embed",)
+    return p
+
+
+def block_apply(cfg: ModelConfig, kind: LayerKind, p, x, positions, *,
+                cache=None, cache_index=None, act=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind.block == "mlstm":
+        x, c = S.mlstm_block_apply(cfg, p, x, cache=cache)
+        return x, c, aux
+    if kind.block == "slstm":
+        x, c = S.slstm_block_apply(cfg, p, x, cache=cache)
+        return x, c, aux
+
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_cache = None if cache is None else cache["attn"]
+    if kind.attn == "mla":
+        ay, new_attn = L.mla_apply(cfg, p["attn"], h, positions,
+                                   cache=attn_cache, cache_index=cache_index,
+                                   act=act)
+    else:
+        ay, new_attn = L.attn_apply(cfg, p["attn"], h, positions,
+                                    cache=attn_cache, cache_index=cache_index,
+                                    sliding_window=kind.sliding_window,
+                                    act=act)
+    new_cache: Dict[str, Any] = {"attn": new_attn}
+    # constrain branch outputs to the residual (seq-sharded) spec BEFORE
+    # the add: the TP partial-sum then lowers to a reduce-scatter instead
+    # of all-reduce + slice (16x less wire; §Perf iteration 5)
+    ay = _wsc(ay, act)
+    if kind.block == "hymba":
+        my, new_mamba = S.mamba_apply(cfg, p["mamba"],
+                                      h, cache=None if cache is None else cache["mamba"])
+        my = _wsc(my, act)
+        fused = 0.5 * (p["beta_attn"] * L.rms_norm(ay, p["norm_attn"], cfg.norm_eps).astype(jnp.float32)
+                       + p["beta_ssm"] * L.rms_norm(my, p["norm_ssm"], cfg.norm_eps).astype(jnp.float32))
+        x = x + fused.astype(x.dtype)
+        new_cache["mamba"] = new_mamba
+    else:
+        x = x + ay
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind.ffn == "moe":
+        fy, aux = L.moe_apply(cfg, p["ffn"], h2)
+    else:
+        fy = L.mlp_apply(p["ffn"], h2)
+    fy = _wsc(fy, act)
+    return x + fy, new_cache, aux
+
+
+def block_cache_init(cfg: ModelConfig, kind: LayerKind, B: int, max_len: int):
+    """Single-layer decode cache (pre-allocated)."""
+    dt = L.dtype_of(cfg)
+    if kind.block == "mlstm":
+        return S.mlstm_cache_init(cfg, B)
+    if kind.block == "slstm":
+        return S.slstm_state_init(cfg, B)
+    c: Dict[str, Any] = {}
+    if kind.attn == "mla":
+        c["attn"] = {
+            "latent": jnp.zeros((B, max_len, cfg.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((B, max_len, cfg.qk_rope_head_dim), dt),
+        }
+    else:
+        # KV-major layout (B, KV, S, hd): decode contracts hd without a
+        # per-step transposed cache copy (EXPERIMENTS.md §Perf C1)
+        length = kind.sliding_window or max_len
+        c["attn"] = {
+            "k": jnp.zeros((B, cfg.n_kv_heads, length, cfg.head_dim), dt),
+            "v": jnp.zeros((B, cfg.n_kv_heads, length, cfg.head_dim), dt),
+        }
+    if kind.block == "hymba":
+        c["mamba"] = S.mamba_cache_init(cfg, B)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# model init / spec
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key):
+    dt = L.dtype_of(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params: Dict[str, Any] = {}
+    if cfg.n_codebooks:
+        params["embed"] = L.init_dense(keys[0], (cfg.n_codebooks, cfg.vocab_size, cfg.d_model), dt, scale=0.02)
+        params["lm_head"] = L.init_dense(keys[1], (cfg.n_codebooks, cfg.d_model, cfg.vocab_size), dt,
+                                         scale=1.0 / math.sqrt(cfg.d_model))
+    else:
+        params["embed"] = L.init_dense(keys[0], (cfg.vocab_size, cfg.d_model), dt, scale=0.02)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.init_dense(keys[1], (cfg.d_model, cfg.vocab_size), dt)
+    params["final_norm"] = jnp.ones((cfg.d_model,), dt)
+    runs = layer_runs(cfg)
+    run_params = []
+    li = 0
+    for kind, count in runs:
+        rk = jnp.stack([keys[3 + li + j] for j in range(count)])
+        run_params.append(jax.vmap(lambda k: block_init(cfg, kind, k))(rk))
+        li += count
+    params["runs"] = run_params
+    return params
+
+
+def spec(cfg: ModelConfig):
+    sp: Dict[str, Any] = {}
+    if cfg.n_codebooks:
+        sp["embed"] = (None, "vocab", "embed")
+        sp["lm_head"] = (None, "embed", "vocab")
+    else:
+        sp["embed"] = ("vocab", "embed")
+        if not cfg.tie_embeddings:
+            sp["lm_head"] = ("embed", "vocab")
+    sp["final_norm"] = ("embed",)
+    sp["runs"] = [
+        jax.tree.map(lambda s: ("layers",) + tuple(s), block_spec(cfg, kind),
+                     is_leaf=lambda s: isinstance(s, tuple))
+        for kind, _ in layer_runs(cfg)
+    ]
+    return sp
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _wsc(x, act):
+    """act: None or an object with .residual (NamedSharding) ."""
+    if act is None:
+        return x
+    spec = getattr(act, "residual", act)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def embed_inputs(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    """Map raw inputs to the (B, S, d) residual stream."""
+    dt = L.dtype_of(cfg)
+    if "frames" in batch:                     # audio stub frontend
+        return batch["frames"].astype(dt)
+    tokens = batch["tokens"]
+    if cfg.n_codebooks:                       # musicgen: sum codebook embeds
+        parts = [jnp.take(params["embed"][c], tokens[..., c], axis=0)
+                 for c in range(cfg.n_codebooks)]
+        h = sum(parts)
+    else:
+        h = jnp.take(params["embed"], tokens, axis=0)
+    if "patches" in batch:                    # vlm stub frontend: prepend
+        h = jnp.concatenate([batch["patches"].astype(dt), h], axis=1)
+    return h.astype(dt)
+
+
+def forward(cfg: ModelConfig, params, h, positions, *, caches=None,
+            cache_index=None, mode: str = "train", act_sharding=None):
+    """Residual-stream forward through all runs.
+
+    h: (B,S,d).  caches: list (one stacked tree per run) or None.
+    Returns (h, new_caches, aux_loss).
+    """
+    runs = layer_runs(cfg)
+    new_caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for ri, (kind, count) in enumerate(runs):
+        rp = params["runs"][ri]
+        rc = caches[ri] if caches is not None else None
+
+        def body(carry, per_layer, kind=kind):
+            x, aux = carry
+            if rc is not None:
+                p, c = per_layer
+            else:
+                p, c = per_layer, None
+            x, new_c, a = block_apply(cfg, kind, p, x, positions,
+                                      cache=c, cache_index=cache_index,
+                                      act=act_sharding)
+            x = _wsc(x, act_sharding)
+            return (x, aux + a), new_c
+
+        xs = (rp, rc) if rc is not None else rp
+        if cfg.scan_layers:
+            if cfg.remat and mode == "train":
+                # PERF-ITERATION B1: default saves ONLY the scan carry (the
+                # residual stream); dots_saveable kept the flash-attention
+                # probabilities of every (q,kv) block pair alive for the
+                # backward pass (~13 TB/step on qwen3-4b train_4k).
+                policy = (jax.checkpoint_policies.dots_saveable
+                          if cfg.remat_policy == "dots" else None)
+                body_fn = jax.checkpoint(body, policy=policy)
+            else:
+                body_fn = body
+            (h, aux_total), nc = jax.lax.scan(body_fn, (h, aux_total), xs)
+        else:
+            ncs = []
+            for i in range(count):
+                pl = jax.tree.map(lambda a: a[i], xs)
+                (h, aux_total), c_i = body((h, aux_total), pl)
+                ncs.append(c_i)
+            nc = (jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+                  if ncs and ncs[0] is not None else None)
+        new_caches.append(nc)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, new_caches, aux_total
+
+
+def unembed(cfg: ModelConfig, params, h, act_sharding=None):
+    """h: (..., d) -> logits fp32.  Musicgen: (..., ncb, V)."""
+    if cfg.n_codebooks:
+        logits = L.einsum32("bsd,cdv->bscv", h, params["lm_head"])
+    else:
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = L.einsum32("bsd,dv->bsv", h, w)
+    return _wsc(logits, act_sharding)
+
+
+def forward_slice(cfg: ModelConfig, params, h, positions, lo: int, hi: int, *,
+                  caches=None, cache_index=None, mode: str = "prefill",
+                  act_sharding=None):
+    """Execute layers [lo, hi) only -- the split-inference partial forward.
+
+    Run params are tree-sliced so the head/tail execute exactly the
+    published weights (no retraining, as the paper requires).  Returns
+    (h, new_caches_for_slice, aux).
+    """
+    runs = layer_runs(cfg)
+    new_caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+    start = 0
+    for ri, (kind, count) in enumerate(runs):
+        end = start + count
+        s, e = max(lo, start), min(hi, end)
+        if s >= e:
+            start = end
+            continue
+        sl = slice(s - start, e - start)
+        rp = jax.tree.map(lambda a: a[sl], params["runs"][ri])
+        rc = None
+        if caches is not None and caches[ri] is not None:
+            rc = jax.tree.map(lambda a: a[sl], caches[ri])
+
+        def body(carry, per_layer, kind=kind, rc=rc):
+            x, aux = carry
+            if rc is not None:
+                p, c = per_layer
+            else:
+                p, c = per_layer, None
+            x, new_c, a = block_apply(cfg, kind, p, x, positions,
+                                      cache=c, cache_index=cache_index,
+                                      act=act_sharding)
+            x = _wsc(x, act_sharding)
+            return (x, aux + a), new_c
+
+        xs = (rp, rc) if rc is not None else rp
+        if cfg.scan_layers:
+            if cfg.remat and mode == "train":
+                # PERF-ITERATION B1: default saves ONLY the scan carry (the
+                # residual stream); dots_saveable kept the flash-attention
+                # probabilities of every (q,kv) block pair alive for the
+                # backward pass (~13 TB/step on qwen3-4b train_4k).
+                policy = (jax.checkpoint_policies.dots_saveable
+                          if cfg.remat_policy == "dots" else None)
+                body_fn = jax.checkpoint(body, policy=policy)
+            else:
+                body_fn = body
+            (h, aux_total), nc = jax.lax.scan(body_fn, (h, aux_total), xs)
+        else:
+            ncs = []
+            for i in range(e - s):
+                pl_ = jax.tree.map(lambda a: a[i], xs)
+                (h, aux_total), c_i = body((h, aux_total), pl_)
+                ncs.append(c_i)
+            nc = (jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+                  if ncs and ncs[0] is not None else None)
+        new_caches.append(nc)
+        start = end
+    return h, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (logits for the full sequence are never materialized)
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params, h, labels, *, logits_sharding=None):
+    """h: (B,S,d); labels: (B,S) int32 (or (B,S,ncb)); -1 = ignore."""
+    B, Sq, d = h.shape
+    Lc = min(cfg.loss_chunk, Sq)
+    pad = (-Sq) % Lc
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)) + ((0, 0),) * (labels.ndim - 2),
+                         constant_values=-1)
+    nc = (Sq + pad) // Lc
+    hc = h.reshape(B, nc, Lc, d).swapaxes(0, 1)            # (nc,B,Lc,d)
+    lc = labels.reshape((B, nc, Lc) + labels.shape[2:]).swapaxes(0, 1)
+
+    V = cfg.vocab_size
+
+    @jax.checkpoint
+    def chunk_loss(h_c, l_c):
+        logits = unembed(cfg, params, h_c, logits_sharding)   # (B,Lc,[ncb,]V) fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        picked = jnp.sum(jnp.where(iota == l_c[..., None], logits, 0.0), axis=-1)
+        w = (l_c >= 0).astype(jnp.float32)
+        return jnp.sum((lse - picked) * w), jnp.sum(w)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        s, c = chunk_loss(*xs)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# task-level entry points (loss_fn / prefill / decode_step)
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params, batch, *, act_sharding=None,
+            logits_sharding=None):
+    h = embed_inputs(cfg, params, batch)
+    B, Sq = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    h, _, aux = forward(cfg, params, h, positions, mode="train",
+                        act_sharding=act_sharding)
+    loss = lm_loss(cfg, params, h, batch["labels"], logits_sharding=logits_sharding)
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux / max(cfg.n_layers, 1)
+    return loss
+
+
+def cache_init(cfg: ModelConfig, B: int, max_len: int):
+    """Stacked decode caches, one tree per run."""
+    caches = []
+    for kind, count in layer_runs(cfg):
+        single = block_cache_init(cfg, kind, B, max_len)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count,) + a.shape).copy() if a.size else
+            jnp.zeros((count,) + a.shape, a.dtype), single))
+    return caches
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int, *,
+            act_sharding=None):
+    """Process the prompt, build decode caches.  Returns (last_logits, caches)."""
+    h = embed_inputs(cfg, params, batch)
+    B, Sq = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    h, seq_caches, _ = forward(cfg, params, h, positions, mode="prefill")
+    # re-layout sequence kv into pre-allocated decode caches
+    caches = cache_init(cfg, B, max_len)
+    out = []
+    for (kind, count), dec, got in zip(layer_runs(cfg), caches, seq_caches):
+        out.append(_merge_prefill_cache(cfg, kind, dec, got, Sq))
+    logits = unembed(cfg, params, h[:, -1:], act_sharding)
+    return logits, out
+
+
+def _merge_prefill_cache(cfg, kind: LayerKind, dec, got, Sq: int):
+    """Write prefill kv/states into the pre-allocated decode cache."""
+    if kind.block in ("mlstm", "slstm"):
+        return got                                  # states only, right layout
+    merged = dict(dec)
+    if kind.attn == "mla":
+        merged["attn"] = {
+            "latent": jax.lax.dynamic_update_slice_in_dim(
+                dec["attn"]["latent"], got["attn"]["latent"].astype(dec["attn"]["latent"].dtype), 0, axis=2),
+            "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                dec["attn"]["k_rope"], got["attn"]["k_rope"].astype(dec["attn"]["k_rope"].dtype), 0, axis=2),
+        }
+    else:
+        w = kind.sliding_window
+        k, v = got["attn"]["k"], got["attn"]["v"]   # (count,B,Sq,KV,hd)
+        k = k.transpose(0, 1, 3, 2, 4)              # -> (count,B,KV,Sq,hd)
+        v = v.transpose(0, 1, 3, 2, 4)
+        if w and Sq >= w:
+            k, v = k[..., -w:, :], v[..., -w:, :]
+            shift = Sq % w
+            k = jnp.roll(k, shift, axis=3)
+            v = jnp.roll(v, shift, axis=3)
+            merged["attn"] = {"k": k.astype(dec["attn"]["k"].dtype),
+                              "v": v.astype(dec["attn"]["v"].dtype)}
+        else:
+            merged["attn"] = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    dec["attn"]["k"], k.astype(dec["attn"]["k"].dtype), 0, axis=3),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    dec["attn"]["v"], v.astype(dec["attn"]["v"].dtype), 0, axis=3),
+            }
+    if kind.block == "hymba":
+        merged["mamba"] = got["mamba"]
+    return merged
+
+
+def decode_step(cfg: ModelConfig, params, caches, batch, cache_index, *,
+                act_sharding=None, logits_sharding=None):
+    """One-token decode.  batch: tokens (B,1[,ncb]) or frames (B,1,d).
+
+    cache_index: scalar int32 position of the new token.
+    Returns (logits (B,1,[ncb,]V), new_caches).
+    """
+    h = embed_inputs(cfg, params, batch)
+    B = h.shape[0]
+    positions = jnp.broadcast_to(cache_index.astype(jnp.int32), (B, 1))
+    h, new_caches, _ = forward(cfg, params, h, positions, caches=caches,
+                               cache_index=cache_index, mode="decode",
+                               act_sharding=act_sharding)
+    logits = unembed(cfg, params, h, logits_sharding)
+    return logits, new_caches

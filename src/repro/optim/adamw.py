@@ -1,0 +1,73 @@
+"""AdamW + warmup-cosine schedule (pure JAX, pytree-native).
+
+bf16 params with fp32 first/second moments; updates computed in fp32 and
+cast back -- the standard large-model recipe.  No optax dependency (the
+environment is offline); the API mirrors it so the swap is mechanical.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    max_grad_norm: float = 1.0
+
+    def schedule(self, step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1), 0.0, 1.0)
+        cos = self.min_lr_frac + (1 - self.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.lr * warm * cos
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), p)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=zeros(params), v=zeros(params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, dict]:
+        step = state.step + 1
+        # global-norm clip (fp32)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(g32)))
+        scale = jnp.minimum(1.0, self.max_grad_norm / (gnorm + 1e-9))
+        g32 = jax.tree.map(lambda g: g * scale, g32)
+
+        m = jax.tree.map(lambda mm, g: self.b1 * mm + (1 - self.b1) * g,
+                         state.m, g32)
+        v = jax.tree.map(lambda vv, g: self.b2 * vv + (1 - self.b2) * g * g,
+                         state.v, g32)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.schedule(step)
+
+        def upd(p, mm, vv):
+            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step=step, m=m, v=v), {
+            "grad_norm": gnorm, "lr": lr}

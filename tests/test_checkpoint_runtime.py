@@ -1,0 +1,142 @@
+"""Checkpoint store + fault-tolerance control logic."""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import store as CK
+from repro.runtime.failures import (HeartbeatMonitor, StragglerMonitor,
+                                    decide_recovery, elastic_plan)
+
+
+@pytest.fixture
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_save_restore_roundtrip(tmp_path, tree):
+    path = CK.save(tree, str(tmp_path), step=3)
+    assert os.path.exists(os.path.join(path, CK.COMMITTED))
+    like = jax.eval_shape(lambda: tree)
+    out = CK.restore(str(tmp_path), 3, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step_ignores_uncommitted(tmp_path, tree):
+    CK.save(tree, str(tmp_path), step=1)
+    CK.save(tree, str(tmp_path), step=2)
+    os.remove(os.path.join(str(tmp_path), "step_00000002", CK.COMMITTED))
+    assert CK.latest_step(str(tmp_path)) == 1
+
+
+def test_async_checkpointer(tmp_path, tree):
+    ck = CK.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        ck.save_async(tree, s)
+    ck.wait()
+    steps = sorted(int(p.split("_")[1]) for p in os.listdir(str(tmp_path)))
+    assert steps == [2, 3]                      # gc keeps last 2
+    assert CK.latest_step(str(tmp_path)) == 3
+
+
+def test_restore_shape_mismatch_raises(tmp_path, tree):
+    CK.save(tree, str(tmp_path), step=1)
+    bad = {"a": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+           "b": {"c": jax.ShapeDtypeStruct((5,), jnp.bfloat16),
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+    with pytest.raises(AssertionError):
+        CK.restore(str(tmp_path), 1, bad)
+
+
+# -- failure detection -------------------------------------------------------
+
+def test_heartbeat_detector():
+    mon = HeartbeatMonitor(n_workers=4, timeout_s=5.0)
+    for w in range(4):
+        mon.beat(w, now=100.0)
+    assert mon.dead(now=102.0) == []
+    mon.beat(0, now=104.0)
+    mon.beat(1, now=104.0)
+    mon.beat(2, now=104.0)
+    assert mon.dead(now=106.5) == [3]
+    assert mon.alive(now=106.5) == [0, 1, 2]
+
+
+def test_straggler_detection():
+    mon = StragglerMonitor(n_workers=4, factor=2.0)
+    for step in range(10):
+        for w in range(4):
+            mon.record(w, 1.0 if w != 2 else 3.5)
+    assert mon.stragglers() == [2]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 200), st.integers(1, 8), st.integers(1, 32),
+       st.sampled_from([1, 2]))
+def test_elastic_plan_invariants(hosts, dev_per_host, mp, pods):
+    plan = elastic_plan(hosts, dev_per_host, mp, pods=pods)
+    total = hosts * dev_per_host
+    if total < mp:
+        assert plan is None
+    else:
+        assert plan is not None
+        assert plan.n_devices <= total
+        # model axis preserved exactly
+        assert plan.shape[-1] == mp
+        dp = plan.data_parallel
+        assert dp & (dp - 1) == 0               # power of two
+
+
+def test_decide_recovery_continue():
+    hb = HeartbeatMonitor(4, timeout_s=5)
+    for w in range(4):
+        hb.beat(w, now=0.0)
+    sg = StragglerMonitor(4)
+    d = decide_recovery(hb, sg, devices_per_host=4, model_parallel=4,
+                        last_ckpt_step=10, now=1.0)
+    assert d.action == "continue"
+
+
+def test_decide_recovery_remesh_on_death():
+    hb = HeartbeatMonitor(4, timeout_s=5)
+    for w in range(3):
+        hb.beat(w, now=100.0)
+    sg = StragglerMonitor(4)
+    d = decide_recovery(hb, sg, devices_per_host=4, model_parallel=4,
+                        last_ckpt_step=10, now=101.0)
+    assert d.action == "remesh"
+    assert d.restore_step == 10                  # dead host -> restore
+    assert 3 in d.excluded_workers
+    assert d.plan.shape[-1] == 4
+
+
+def test_decide_recovery_halt_when_tp_unsatisfiable():
+    hb = HeartbeatMonitor(2, timeout_s=5)
+    hb.beat(0, now=100.0)
+    sg = StragglerMonitor(2)
+    d = decide_recovery(hb, sg, devices_per_host=4, model_parallel=16,
+                        last_ckpt_step=5, now=101.0)
+    assert d.action == "halt"
+
+
+def test_straggler_remesh_without_restore():
+    hb = HeartbeatMonitor(4, timeout_s=1e9)
+    for w in range(4):
+        hb.beat(w, now=0.0)
+    sg = StragglerMonitor(4)
+    for _ in range(10):
+        for w in range(4):
+            sg.record(w, 4.0 if w == 1 else 1.0)
+    d = decide_recovery(hb, sg, devices_per_host=4, model_parallel=4,
+                        last_ckpt_step=9, now=1.0)
+    assert d.action == "remesh"
+    assert d.restore_step is None                # params still live in HBM

@@ -1,0 +1,102 @@
+"""Activation codec: exactness, accounting, property-based invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import ActivationCodec
+
+
+def _roundtrip(codec, tree):
+    p = codec.compress(tree)
+    out = codec.decompress(p)
+    return p, out
+
+
+def test_int8_zlib_roundtrip_within_quant_error():
+    codec = ActivationCodec(mode="int8_zlib", quant_block=1024)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 56, 56, 24)) * 5
+    p, out = _roundtrip(codec, {"x": x})
+    err = np.abs(np.asarray(out["x"]) - np.asarray(x))
+    assert err.max() <= np.abs(np.asarray(x)).max() / 254 + 1e-6
+    assert p.compressed_bytes < p.raw_bytes / 3.2     # int8 + zlib > 3.2x
+
+
+def test_delta_mode_exact_vs_int8():
+    """int8_delta_zlib must decode to EXACTLY the same tensor as int8_zlib
+    (the delta filter is lossless on the quantized grid)."""
+    base = ActivationCodec(mode="int8_zlib", quant_block=1024)
+    delta = ActivationCodec(mode="int8_delta_zlib", quant_block=1024)
+    # smooth feature-map-like input (so delta also wins on size)
+    g = np.linspace(0, 4, 56)
+    x = jnp.asarray(np.sin(g)[None, :, None, None]
+                    + np.cos(g)[None, None, :, None]
+                    + 0.1 * np.random.default_rng(0).normal(size=(1, 56, 56, 24)),
+                    jnp.float32)
+    pb, ob = _roundtrip(base, {"x": x})
+    pd, od = _roundtrip(delta, {"x": x})
+    np.testing.assert_array_equal(np.asarray(ob["x"]), np.asarray(od["x"]))
+    assert pd.compressed_bytes < pb.compressed_bytes   # the win exists
+
+
+def test_raw_and_zlib_modes_exact():
+    for mode in ("raw", "zlib"):
+        codec = ActivationCodec(mode=mode)
+        x = jax.random.normal(jax.random.PRNGKey(1), (33, 17))
+        p, out = _roundtrip(codec, [x, x * 2])
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(x))
+        if mode == "raw":
+            assert p.compressed_bytes >= p.raw_bytes
+
+
+def test_pytree_structure_preserved():
+    codec = ActivationCodec()
+    tree = {"a": jnp.ones((8, 8)), "b": [jnp.zeros((4, 4, 4)),
+                                         jnp.full((16,), 2.0)]}
+    _, out = _roundtrip(codec, tree)
+    assert set(out) == {"a", "b"}
+    assert len(out["b"]) == 2
+    assert out["b"][0].shape == (4, 4, 4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 400), st.integers(1, 7),
+       st.sampled_from(["int8_zlib", "int8", "zlib", "raw"]))
+def test_property_roundtrip_any_shape(n, m, mode):
+    codec = ActivationCodec(mode=mode, quant_block=256)
+    rng = np.random.default_rng(n * 7 + m)
+    x = jnp.asarray(rng.normal(size=(n, m)) * rng.uniform(0.1, 100),
+                    jnp.float32)
+    p, out = _roundtrip(codec, {"x": x})
+    y = np.asarray(out["x"], np.float32)
+    assert y.shape == x.shape
+    if mode in ("zlib", "raw"):
+        np.testing.assert_array_equal(y, np.asarray(x))
+    else:
+        bound = np.abs(np.asarray(x)).max() / 254 + 1e-6
+        assert np.abs(y - np.asarray(x)).max() <= bound * 1.01
+    assert p.raw_bytes == x.size * 4
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 60), st.integers(2, 20), st.integers(1, 12))
+def test_property_delta_mode_lossless(h, w, c):
+    """Delta filter is exactly invertible for every shape/content."""
+    base = ActivationCodec(mode="int8_zlib", quant_block=256)
+    delta = ActivationCodec(mode="int8_delta_zlib", quant_block=256)
+    rng = np.random.default_rng(h * 1000 + w * 10 + c)
+    x = jnp.asarray(rng.normal(size=(1, h, w, c)) * 10, jnp.float32)
+    _, ob = _roundtrip(base, [x])
+    _, od = _roundtrip(delta, [x])
+    np.testing.assert_array_equal(np.asarray(ob[0]), np.asarray(od[0]))
+
+
+def test_estimate_bytes_tracks_measured():
+    codec = ActivationCodec()
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, 64, 16))
+    p = codec.compress([x])
+    est = codec.estimate_bytes([((64, 64, 16), "float32")],
+                               measured_ratio=p.compressed_bytes
+                               / (x.size + 4 * (x.size // codec.quant_block + 1)))
+    assert abs(est - p.compressed_bytes) / p.compressed_bytes < 0.05

@@ -1,0 +1,121 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# -- quant --------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(7,), (128,), (64, 129), (3, 5, 257), (1024,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matches_ref(shape, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 3).astype(dtype)
+    q, s, n = ops.quantize(x, block=256)
+    qr, sr, nr = ref.quant_ref(x, block=256)
+    # values exactly on a .5 rounding boundary may tip either way when the
+    # scale differs in its last ulp -> allow |dq| <= 1 on <1% of elements
+    dq = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+    assert dq.max() <= 1
+    assert (dq > 0).mean() < 0.01
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+    assert n == nr == int(np.prod(shape))
+
+
+@pytest.mark.parametrize("block", [256, 1024, 8192])
+def test_quant_roundtrip_error_bound(block):
+    x = jax.random.normal(jax.random.PRNGKey(1), (5000,)) * 10
+    q, s, n = ops.quantize(x, block=block)
+    xd = ops.dequantize(q, s, n, x.shape)
+    # absmax int8: error <= scale/2 = absmax/254 per block
+    err = np.abs(np.asarray(xd) - np.asarray(x))
+    bound = np.max(np.abs(np.asarray(x))) / 254 + 1e-6
+    assert err.max() <= bound * 1.01
+
+
+def test_quant_zeros():
+    x = jnp.zeros((512,))
+    q, s, n = ops.quantize(x, block=256)
+    assert np.all(np.asarray(q) == 0)
+    xd = ops.dequantize(q, s, n, x.shape)
+    assert np.all(np.asarray(xd) == 0)
+
+
+# -- flash attention -----------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,KV,hd,bq,bk", [
+    (128, 4, 4, 64, 64, 64),     # MHA
+    (256, 8, 2, 64, 128, 64),    # GQA
+    (96, 4, 1, 32, 64, 64),      # MQA, ragged block
+    (128, 4, 2, 128, 128, 128),  # wide head
+])
+def test_flash_attention_matches_ref(S, H, KV, hd, bq, bk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (2, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (2, S, KV, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, block_q=bq, block_kv=bk)
+    exp = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v)
+    exp = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), rtol=2e-2, atol=2e-2)
+
+
+# -- decode attention ------------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,KV,hd,bk", [
+    (512, 8, 2, 64, 128), (300, 4, 4, 64, 128), (1024, 16, 2, 128, 512),
+])
+def test_decode_attention_matches_ref(S, H, KV, hd, bk):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    B = 3
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    kv_len = jnp.asarray([S // 3, S // 2, S], jnp.int32)
+    out = ops.decode_attention(q, k, v, kv_len, block_kv=bk)
+    exp = ref.decode_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+# -- window attention -------------------------------------------------------------
+
+@pytest.mark.parametrize("w2,nh,hd", [(49, 3, 32), (49, 6, 32), (64, 4, 64)])
+def test_window_attention_matches_ref(w2, nh, hd):
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    nB = 5
+    q = jax.random.normal(ks[0], (nB, w2, nh, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (nB, w2, nh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (nB, w2, nh, hd), jnp.float32)
+    bias = jax.random.normal(ks[3], (nh, w2, w2), jnp.float32)
+    mask = jax.random.bernoulli(ks[4], 0.7, (nB, w2, w2))
+    mask = mask | jnp.eye(w2, dtype=bool)[None]
+    out = ops.window_attention(q, k, v, bias, mask)
+    exp = ref.window_attention_ref(q, k, v, bias, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_window_attention_no_mask():
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    q = jax.random.normal(ks[0], (4, 49, 3, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (4, 49, 3, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (4, 49, 3, 32), jnp.float32)
+    bias = jax.random.normal(ks[3], (3, 49, 49), jnp.float32)
+    out = ops.window_attention(q, k, v, bias, None)
+    exp = ref.window_attention_ref(q, k, v, bias, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,137 @@
+"""Per-arch smoke tests (assignment deliverable f): every assigned
+architecture instantiates at a reduced config and runs one forward/train
+step on CPU with finite outputs + correct shapes; decode continues
+prefill consistently."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.configs.base import count_params, SHAPES_BY_NAME
+from repro.models import transformer as T
+from repro.models.registry import get_model
+
+
+def _small_shape(cfg):
+    from repro.configs.base import InputShape
+    return InputShape("tiny", seq_len=16, global_batch=2, kind="train")
+
+
+def _batch(model, cfg, key):
+    return model.concrete(model.train_inputs(_small_shape(cfg)), key)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_reduced_config(arch)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(model, cfg, key)
+    loss = jax.jit(lambda p, b: model.loss_fn(p, b))(params, batch)
+    assert np.isfinite(float(loss)), (arch, loss)
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_grads_finite(arch):
+    cfg = get_reduced_config(arch)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    batch = _batch(model, cfg, key)
+    grads = jax.jit(jax.grad(lambda p, b: model.loss_fn(p, b)))(params, batch)
+    for leaf in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """logits for position t from (prefill to t-1 + decode t) must match
+    prefill to t -- the KV-cache/state handoff is exact.
+
+    MoE archs use a drop-free capacity here: capacity-based token dropping
+    depends on the sequence length, so exact prefill/decode equivalence
+    only holds when no tokens are dropped (inherent to capacity routing,
+    not a cache bug)."""
+    cfg = get_reduced_config(arch)
+    if cfg.n_experts:
+        cfg = cfg.replace(moe_capacity_factor=16.0)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(2)
+    params = model.init(key)
+    S = 12
+    from repro.configs.base import InputShape
+    shape = InputShape("tiny", seq_len=S, global_batch=2, kind="prefill")
+    batch = model.concrete(model.prefill_inputs(shape), key)
+
+    # full prefill logits at last position
+    logits_full, _ = jax.jit(
+        lambda p, b: model.prefill(p, b, S))(params, batch)
+
+    # prefill to S-1, then decode token S-1
+    def shorten(x):
+        return x[:, : S - 1] if x.ndim >= 2 and x.shape[1] == S else x
+    if cfg.frontend == "vision_patches":
+        batch_pre = dict(batch)
+        batch_pre["tokens"] = batch["tokens"][:, :-1]
+        last = {"tokens": batch["tokens"][:, -1:]}
+    elif cfg.frontend == "audio_frames":
+        batch_pre = {"frames": batch["frames"][:, : S - 1]}
+        last = {"frames": batch["frames"][:, S - 1:]}
+    else:
+        batch_pre = {"tokens": batch["tokens"][:, : S - 1]}
+        last = {"tokens": batch["tokens"][:, S - 1:]}
+    _, caches = jax.jit(lambda p, b: model.prefill(p, b, S))(params, batch_pre)
+    logits_dec, _ = jax.jit(
+        lambda p, c, b, i: model.decode_step(p, c, b, i))(
+        params, caches, last, jnp.asarray(S - 1, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(logits_full, np.float32), rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    # spot-check the assigned numbers survived
+    assert cfg.n_layers >= 24 and cfg.d_model >= 960
+    n = count_params(cfg)
+    assert n > 1e8, f"{arch}: {n}"
+
+
+def test_shape_assignments():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        names = [s.name for s in cfg.shapes()]
+        assert "train_4k" in names and "decode_32k" in names
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in names, arch
+        else:
+            assert "long_500k" not in names, arch
+
+
+def test_loss_decreases_one_arch():
+    """End-to-end sanity: a few AdamW steps reduce loss on structured data."""
+    from repro.data.tokens import TokenStream
+    from repro.optim.adamw import AdamW
+    cfg = get_reduced_config("smollm-360m").replace(remat=False)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=3e-3, warmup_steps=2, total_steps=40)
+    state = opt.init(params)
+    stream = TokenStream(cfg, seq_len=32, batch=8, seed=0)
+
+    @jax.jit
+    def step(p, s, b):
+        loss, g = jax.value_and_grad(lambda pp: model.loss_fn(pp, b))(p)
+        p, s, m = opt.update(g, s, p)
+        return p, s, loss
+
+    losses = []
+    for i, batch in zip(range(30), stream):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, state, loss = step(params, state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.2, losses[:3] + losses[-3:]

@@ -1,0 +1,97 @@
+"""Split-execution correctness: head(l) + tail(l) == full forward, for the
+paper's Swin plan and the LM generalization, at every candidate split."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.configs.swin_t_detection import reduced as swin_reduced
+from repro.core.compression import ActivationCodec
+from repro.core.splitting import (LMSplitPlan, SwinSplitPlan, SERVER_ONLY,
+                                  UE_ONLY)
+from repro.models import swin as SW
+from repro.models.registry import get_model
+
+
+@pytest.fixture(scope="module")
+def swin_setup():
+    cfg = swin_reduced()
+    params = SW.init(cfg, jax.random.PRNGKey(0))
+    img = jax.random.uniform(jax.random.PRNGKey(1), (2, cfg.img_h, cfg.img_w, 3))
+    plan = SwinSplitPlan(cfg, params, include_early_split=True)
+    full = SW.forward_full(cfg, params, img)
+    return cfg, params, img, plan, full
+
+
+def test_swin_every_split_matches_full(swin_setup):
+    cfg, params, img, plan, full = swin_setup
+    for opt in plan.options:
+        payload, local = plan.head(img, opt)
+        out = local if opt == UE_ONLY else plan.tail(payload, opt)
+        for lv_f, lv_o in zip(full, out):
+            np.testing.assert_allclose(np.asarray(lv_f["cls"]),
+                                       np.asarray(lv_o["cls"]),
+                                       rtol=3e-5, atol=3e-5)
+
+
+def test_swin_split_through_codec(swin_setup):
+    """head -> INT8+zlib -> tail still detects (bounded logit drift) --
+    the paper's accuracy-preserving claim."""
+    cfg, params, img, plan, full = swin_setup
+    codec = ActivationCodec()
+    for opt in ("split1", "split3"):
+        payload, _ = plan.head(img, opt)
+        comp = codec.compress(payload)
+        out = plan.tail(codec.decompress(comp), opt)
+        for lv_f, lv_o in zip(full, out):
+            a, b = np.asarray(lv_f["cls"]), np.asarray(lv_o["cls"])
+            # rank correlation of detection scores stays high
+            denom = max(float(np.std(a)), 1e-6)
+            assert np.abs(a - b).mean() / denom < 0.15, opt
+
+
+def test_swin_flops_partition(swin_setup):
+    cfg, params, img, plan, full = swin_setup
+    total = SW.total_flops(cfg)
+    for opt in plan.options:
+        assert plan.head_flops(opt) + plan.tail_flops(opt) == total
+
+
+def test_swin_payload_monotonicity():
+    """Raw payload grows with split depth (cumulative FPN features), as in
+    paper Fig. 3's increasing curve."""
+    cfg = swin_reduced()
+    plan = SwinSplitPlan(cfg, params=None)
+    sizes = [plan.raw_payload_bytes(f"split{l}") for l in (1, 2, 3, 4)]
+    assert sizes == sorted(sizes)
+    assert plan.raw_payload_bytes(SERVER_ONLY) < sizes[0]
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "granite-moe-3b-a800m",
+                                  "xlstm-350m", "hymba-1.5b",
+                                  "deepseek-v2-lite-16b"])
+def test_lm_split_matches_full(arch):
+    cfg = get_reduced_config(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.configs.base import InputShape
+    shape = InputShape("tiny", seq_len=16, global_batch=2, kind="prefill")
+    batch = model.concrete(model.prefill_inputs(shape), jax.random.PRNGKey(1))
+    plan = LMSplitPlan(cfg, params)
+    _, full_logits = plan.head(batch, UE_ONLY)
+    for opt in plan.options:
+        if opt == UE_ONLY:
+            continue
+        payload, _ = plan.head(batch, opt)
+        out = plan.tail(payload, opt)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(full_logits, np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_lm_split_candidates_cover_depth():
+    cfg = get_reduced_config("qwen3-1.7b")
+    plan = LMSplitPlan(cfg, params=None)
+    for l in plan.candidates:
+        assert 0 < l < cfg.n_layers

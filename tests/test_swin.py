@@ -1,0 +1,84 @@
+"""Swin backbone internals: masks, merging, flops accounting, payloads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.swin_t_detection import CONFIG as FULL, reduced
+from repro.models import swin as SW
+
+
+def test_rel_pos_index_symmetric_range():
+    idx = SW.rel_pos_index(7)
+    assert idx.shape == (49, 49)
+    assert idx.min() >= 0 and idx.max() < (2 * 7 - 1) ** 2
+    assert (np.diag(idx) == idx[0, 0]).all()      # zero-offset bucket
+
+
+def test_shift_mask_blocks_cross_region():
+    m = SW.shift_attn_mask(14, 14, 7, 3)
+    assert m.shape == (4, 49, 49)
+    assert m[0].all()                  # first window: single region
+    assert not m[-1].all()             # wrapped window: masked pairs exist
+    assert (m[-1] & np.eye(49, dtype=bool)).diagonal().all()
+
+
+def test_patch_merge_shapes():
+    cfg = reduced()
+    params = SW.init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 14, 14, cfg.embed_dim))
+    y = SW.patch_merge(cfg, params["stages"][0]["merge"], x)
+    assert y.shape == (1, 7, 7, 2 * cfg.embed_dim)
+
+
+def test_stage_hw_and_dims():
+    assert FULL.stage_hw(0) == (136, 200)
+    assert FULL.stage_hw(3) == (17, 25)
+    assert FULL.stage_dim(3) == 768
+
+
+def test_flops_total_is_sum_of_parts():
+    sf = SW.stage_flops(FULL)
+    assert SW.total_flops(FULL) == sum(sf.values())
+    assert SW.head_flops(FULL, 4) + sf["det"] == SW.total_flops(FULL)
+    # monotone head flops
+    hf = [SW.head_flops(FULL, s) for s in range(5)]
+    assert hf == sorted(hf)
+
+
+def test_paper_input_size():
+    """Input payload must match the paper's stated 1.312 MB (uint8 RGB)."""
+    n = FULL.img_h * FULL.img_w * 3
+    assert abs(n / 2 ** 20 - 1.25) < 0.2          # ~1.3 MB
+    # and activations are several x the input, motivating compression
+    assert SW.boundary_bytes(FULL, 1) > 8 * n
+
+
+def test_detection_loss_finite():
+    cfg = reduced()
+    params = SW.init(cfg, jax.random.PRNGKey(0))
+    img = jax.random.uniform(jax.random.PRNGKey(1), (1, cfg.img_h, cfg.img_w, 3))
+    levels = SW.forward_full(cfg, params, img)
+    targets = []
+    rng = np.random.default_rng(0)
+    for lv in levels:
+        B, H, W, _ = lv["cls"].shape
+        targets.append({
+            "cls": jnp.asarray(rng.integers(0, cfg.num_classes, (B, H, W))),
+            "box": jnp.asarray(rng.uniform(0, 10, (B, H, W, 4)), jnp.float32),
+            "pos": jnp.asarray(rng.random((B, H, W)) < 0.2),
+        })
+    loss = SW.detection_loss(cfg, levels, targets)
+    assert np.isfinite(float(loss))
+
+
+def test_pallas_window_attention_path_matches_xla():
+    cfg = reduced()
+    cfg_p = SW.SwinConfig(**{**cfg.__dict__, "attn_impl": "pallas"})
+    params = SW.init(cfg, jax.random.PRNGKey(0))
+    img = jax.random.uniform(jax.random.PRNGKey(1), (1, cfg.img_h, cfg.img_w, 3))
+    out_x = SW.forward_full(cfg, params, img)
+    out_p = SW.forward_full(cfg_p, params, img)
+    for a, b in zip(out_x, out_p):
+        np.testing.assert_allclose(np.asarray(a["cls"]), np.asarray(b["cls"]),
+                                   rtol=2e-4, atol=2e-4)
