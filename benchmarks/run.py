@@ -18,10 +18,10 @@ def main() -> int:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (bench_adaptive, bench_compression, bench_dupf,
-                            bench_e2e_delay, bench_energy_breakdown,
-                            bench_energy_privacy, bench_estimator,
-                            bench_tx_energy)
+    from benchmarks import (bench_adaptive, bench_cell, bench_compression,
+                            bench_dupf, bench_e2e_delay,
+                            bench_energy_breakdown, bench_energy_privacy,
+                            bench_estimator, bench_tx_energy)
 
     benches = [
         ("fig3_compression", bench_compression.run),
@@ -32,6 +32,7 @@ def main() -> int:
         ("fig8_dupf", bench_dupf.run),
         ("estimator_ablation", bench_estimator.run),
         ("adaptive_vs_fixed", bench_adaptive.run),
+        ("cell_batching", bench_cell.run),
     ]
     if args.only:
         benches = [(n, f) for n, f in benches if args.only in n]

@@ -1,8 +1,11 @@
 """The paper's contribution: adaptive split inference with activation
 compression over a simulated AI-RAN network."""
 from repro.core.compression import ActivationCodec, CompressedPayload  # noqa: F401
-from repro.core.splitting import (SwinSplitPlan, LMSplitPlan,          # noqa: F401
-                                  UE_ONLY, SERVER_ONLY, split_option)
+from repro.core.splitting import (SplitPlan, SwinSplitPlan, LMSplitPlan,  # noqa: F401
+                                  Workload, UE_ONLY, SERVER_ONLY,
+                                  split_option)
+from repro.core.cell import (CellSimulator, TailBatcher, CellStats,    # noqa: F401
+                             cell_interference_traces)
 from repro.core.channel import (ChannelModel, PathModel, dupf_path,    # noqa: F401
                                 cupf_path, INTERFERENCE_LEVELS)
 from repro.core.calibration import calibrate, Calibrated, PAPER        # noqa: F401

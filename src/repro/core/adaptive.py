@@ -16,7 +16,7 @@ prevents split flapping under noisy estimates.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -56,11 +56,27 @@ class AdaptiveController:
     objective: Objective
     path: PathModel
     privacy_profile: Dict[str, float]
+    # optional SplitPlan for plan-specific accounting.  None = the paper's
+    # calibrated Swin tables (the single-UE default); the cell simulator
+    # sets it for non-Swin plans so predictions use the plan's own FLOPs
+    # and payload specs instead of Swin's.
+    plan: Optional[Any] = None
     interference_db: float = -40.0   # latest sensed level (for TX power)
     hysteresis: float = 0.05
     quant_time_s: float = 0.010      # measured codec cost per frame
     _current: Optional[str] = None
     _ratio: float = 1.0              # measured compressed/raw feedback
+
+    # -- per-UE replication (multi-UE cell) ----------------------------------
+    def clone(self) -> "AdaptiveController":
+        """Fresh controller sharing the (expensively trained) estimator and
+        calibrated system, with its own hysteresis/compression-ratio state.
+        ``CellSimulator`` spawns one per UE."""
+        import dataclasses
+        return dataclasses.replace(self, _current=None, _ratio=1.0)
+
+    def spawn(self, n: int) -> List["AdaptiveController"]:
+        return [self.clone() for _ in range(n)]
 
     # -- feedback from the pipeline ------------------------------------------
     def observe_ratio(self, compressed: int, raw: int):
@@ -70,10 +86,15 @@ class AdaptiveController:
     # -- prediction ------------------------------------------------------------
     def predict(self, option: str, rate_bps: float) -> Prediction:
         sysm = self.system
-        head_t = sysm.head_time_s(option)
-        tail_t = sysm.tail_time_s(option)
-        raw_b = sysm.raw_bytes.get(option, 0)
-        comp_b = sysm.compressed_bytes.get(option, 0)
+        if self.plan is not None:
+            head_t = sysm.ue.compute_time_s(self.plan.head_flops(option))
+            tail_t = sysm.edge.compute_time_s(self.plan.tail_flops(option))
+            raw_b, comp_b = sysm.payload_bytes(self.plan, option)
+        else:
+            head_t = sysm.head_time_s(option)
+            tail_t = sysm.tail_time_s(option)
+            raw_b = sysm.raw_bytes.get(option, 0)
+            comp_b = sysm.compressed_bytes.get(option, 0)
         if option == SERVER_ONLY:
             est_b = raw_b                               # raw image ships as-is
         elif raw_b == 0:

@@ -83,6 +83,24 @@ class Calibrated:
         plan.include_early_split = False
         return self.edge.compute_time_s(plan.tail_flops(option))
 
+    def payload_bytes(self, plan, option: str,
+                      codec: Optional[ActivationCodec] = None):
+        """(raw, compressed) boundary bytes for any SplitPlan.  The tables
+        are measurements of the paper's Swin plan at full resolution and
+        apply to Swin plans only (accounting always charges the full-size
+        calibrated system, even when a reduced stand-in executes); other
+        plan families share option *names* but ship entirely different
+        payloads, so they are estimated from their own payload specs with
+        ``codec`` (default: the paper's int8+zlib setting)."""
+        from repro.core.splitting import SERVER_ONLY, SwinSplitPlan
+        if isinstance(plan, SwinSplitPlan) and option in self.raw_bytes:
+            return self.raw_bytes[option], self.compressed_bytes[option]
+        raw = plan.raw_payload_bytes(option)
+        if option == SERVER_ONLY:
+            return raw, raw                  # raw input ships as-is
+        codec = codec or ActivationCodec()
+        return raw, codec.estimate_bytes(plan.payload_specs(option))
+
 
 def _measure_payloads(cfg: SwinConfig, codec: ActivationCodec,
                       seed: int = 0) -> Dict[str, Dict[str, int]]:

@@ -1,0 +1,402 @@
+"""Multi-UE cell simulation: one edge server serving a whole cell of UEs.
+
+The paper validates one UE against one edge server; this module scales the
+same mechanism to a cell.  Per frame-slot every UE runs the familiar
+sense -> decide -> head -> encode -> uplink stages (core/pipeline.py), but
+the tail is NOT executed per UE: uplinked payloads land in the edge
+server's ``TailBatcher``, which groups pending requests by split option,
+pads each group to a bucketed batch size, and runs ONE jitted
+``tail_batched`` forward per group (deadline-aware micro-batching, cf.
+*Enhanced AI as a Service at the Edge via Transformer Network*).
+
+Two execution regimes, mirroring the single-UE pipeline:
+
+  * ``execute_model=False`` -- accounting-only.  Channel rate and path
+    latency sampling are vectorized over the UE axis (core/channel.py),
+    so fixed-option sweeps scale to hundreds of UEs without Python-loop
+    overhead.  (Adaptive mode senses per UE from per-UE rngs so each UE's
+    trace is independently reproducible.)
+  * ``execute_model=True``  -- real Swin heads + codec per UE, real batched
+    tail forwards on the edge; time/energy still accounted with the
+    calibrated models.
+
+What batching buys is the edge's per-invocation dispatch cost
+(``DeviceProfile.launch_overhead_s``): serving B same-option payloads in
+one launch costs ``overhead + B * tail_flops / rate`` instead of
+``B * (overhead + tail_flops / rate)``.  Cell-level aggregates (edge
+utilization, batch occupancy, queueing delay) come back in ``CellStats``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.adaptive import AdaptiveController, Prediction
+from repro.core.calibration import Calibrated
+from repro.core.channel import INTERFERENCE_LEVELS, PathModel, dupf_path
+from repro.core.compression import ActivationCodec
+from repro.core.pipeline import (EncodeResult, FrameLog, HeadResult,
+                                 UplinkResult, account_stage, decide_stage,
+                                 encode_stage, sense_stage)
+from repro.core.splitting import SERVER_ONLY, UE_ONLY, SplitPlan, SwinSplitPlan
+
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+# ---------------------------------------------------------------------------
+# edge-side micro-batching
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TailRequest:
+    ue_id: int
+    option: str
+    arrival_s: float              # within-slot time the payload finished uplink
+    payload: Any = None           # real boundary pytree (execute mode)
+
+
+@dataclass
+class ServedTail:
+    tail_s: float                 # service time of the batch that ran us
+    queue_s: float                # arrival -> batch execution start
+    batch_size: int               # real occupancy of that batch
+    out: Any = None               # detections (execute mode)
+
+
+@dataclass
+class BatchRecord:
+    option: str
+    size: int                     # real requests in the batch
+    padded: int                   # bucket size actually executed
+    start_s: float
+    compute_s: float
+
+
+@dataclass
+class TailBatcher:
+    """Deadline-aware micro-batching of tail requests on the edge server.
+
+    A batch for one split option closes when (a) the next same-option
+    arrival would exceed ``max_wait_s`` past the first queued request, or
+    (b) the largest bucket is full.  Closed batches are padded up to the
+    smallest bucket that fits and executed serially on the edge device in
+    close order.  ``batching=False`` degenerates to one launch per request
+    (the sequential per-UE baseline)."""
+    plan: SplitPlan
+    edge: Any                     # DeviceProfile with launch_overhead_s set
+    execute_model: bool = False
+    batching: bool = True
+    buckets: Tuple[int, ...] = DEFAULT_BUCKETS
+    max_wait_s: float = 0.050
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def _form_batches(self, group: List[TailRequest]) -> List[List[TailRequest]]:
+        if not self.batching:
+            return [[r] for r in group]
+        batches: List[List[TailRequest]] = []
+        cur: List[TailRequest] = []
+        for r in group:
+            if cur and (r.arrival_s > cur[0].arrival_s + self.max_wait_s
+                        or len(cur) >= self.buckets[-1]):
+                batches.append(cur)
+                cur = []
+            cur.append(r)
+        if cur:
+            batches.append(cur)
+        return batches
+
+    def run_slot(self, requests: Sequence[TailRequest]
+                 ) -> Tuple[Dict[int, ServedTail], List[BatchRecord]]:
+        """Serve one frame-slot's uplinked requests.  Returns per-UE results
+        and the executed batch records (for cell-level aggregates)."""
+        by_option: Dict[str, List[TailRequest]] = {}
+        for r in sorted(requests, key=lambda r: (r.arrival_s, r.ue_id)):
+            by_option.setdefault(r.option, []).append(r)
+
+        pending: List[List[TailRequest]] = []
+        for group in by_option.values():
+            pending.extend(self._form_batches(group))
+        # a batch is ready once its last member arrived; the edge device
+        # executes ready batches serially in that order
+        pending.sort(key=lambda b: b[-1].arrival_s)
+
+        served: Dict[int, ServedTail] = {}
+        records: List[BatchRecord] = []
+        edge_free = 0.0
+        for batch in pending:
+            option = batch[0].option
+            padded = self._bucket(len(batch)) if self.batching else len(batch)
+            start = max(batch[-1].arrival_s, edge_free)
+            compute_s = self.edge.batch_compute_time_s(
+                self.plan.tail_flops(option), padded)
+            outs: List[Any] = [None] * len(batch)
+            if self.execute_model:
+                outs = self.plan.tail_batched([r.payload for r in batch],
+                                              option, pad_to=padded)
+            for r, out in zip(batch, outs):
+                served[r.ue_id] = ServedTail(
+                    tail_s=compute_s, queue_s=start - r.arrival_s,
+                    batch_size=len(batch), out=out)
+            records.append(BatchRecord(option=option, size=len(batch),
+                                       padded=padded, start_s=start,
+                                       compute_s=compute_s))
+            edge_free = start + compute_s
+        return served, records
+
+
+# ---------------------------------------------------------------------------
+# cell-level aggregates
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CellStats:
+    n_frames: int = 0
+    n_requests: int = 0
+    n_batches: int = 0
+    edge_busy_s: float = 0.0      # total edge compute time
+    span_s: float = 0.0           # sum of per-slot edge makespans
+    occupancy_sum: float = 0.0    # sum of size/padded over batches
+    queue_sum_s: float = 0.0
+
+    def absorb_slot(self, records: List[BatchRecord],
+                    served: Dict[int, ServedTail]):
+        self.n_frames += 1
+        self.n_requests += sum(r.size for r in records)
+        self.n_batches += len(records)
+        busy = sum(r.compute_s for r in records)
+        self.edge_busy_s += busy
+        if records:
+            self.span_s += max(r.start_s + r.compute_s for r in records)
+        self.occupancy_sum += sum(r.size / r.padded for r in records)
+        self.queue_sum_s += sum(s.queue_s for s in served.values())
+
+    @property
+    def edge_utilization(self) -> float:
+        return self.edge_busy_s / self.span_s if self.span_s else 0.0
+
+    @property
+    def mean_batch_occupancy(self) -> float:
+        return self.occupancy_sum / self.n_batches if self.n_batches else 0.0
+
+    @property
+    def mean_batch_size(self) -> float:
+        return self.n_requests / self.n_batches if self.n_batches else 0.0
+
+    @property
+    def mean_queue_s(self) -> float:
+        return self.queue_sum_s / self.n_requests if self.n_requests else 0.0
+
+
+@dataclass
+class CellResult:
+    logs: List[FrameLog]          # all frames, all UEs (log.ue_id says whose)
+    stats: CellStats
+    outputs: Optional[List[Dict[int, Any]]] = None   # per-slot detections
+
+    def ue_logs(self, ue_id: int) -> List[FrameLog]:
+        return [l for l in self.logs if l.ue_id == ue_id]
+
+    @property
+    def mean_delay_s(self) -> float:
+        return float(np.mean([l.delay_s for l in self.logs]))
+
+
+# ---------------------------------------------------------------------------
+# the cell simulator
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CellSimulator:
+    """A cell of ``n_ues`` UEs sharing one channel and one edge server.
+
+    Per-UE state: an interference trace row, a narrowband flag, an rng for
+    sensing, and (optionally) a cloned adaptive controller.  Shared state:
+    the calibrated channel (vectorized sampling), the user-plane path, and
+    the edge ``TailBatcher``."""
+    plan: SplitPlan
+    system: Calibrated
+    n_ues: int
+    codec: ActivationCodec = field(default_factory=ActivationCodec)
+    controller: Optional[AdaptiveController] = None   # template, cloned per UE
+    path: PathModel = field(default_factory=dupf_path)
+    narrowband: Any = False       # scalar or per-UE array of bool
+    seed: int = 0
+    execute_model: bool = False
+    batching: bool = True
+    buckets: Tuple[int, ...] = DEFAULT_BUCKETS
+    max_wait_s: float = 0.050
+    edge_overhead_s: float = 0.008    # per-launch dispatch cost on the edge
+    edge_batch_sat: float = 3.0       # batch-throughput saturation k (energy.py)
+    stats: CellStats = field(default_factory=CellStats)
+
+    def __post_init__(self):
+        self.narrowband = np.broadcast_to(
+            np.asarray(self.narrowband, bool), (self.n_ues,)).copy()
+        self.edge = dataclasses.replace(
+            self.system.edge, launch_overhead_s=self.edge_overhead_s,
+            batch_sat=self.edge_batch_sat)
+        self.batcher = TailBatcher(
+            plan=self.plan, edge=self.edge, execute_model=self.execute_model,
+            batching=self.batching, buckets=self.buckets,
+            max_wait_s=self.max_wait_s)
+        # per-option accounting caches (head time / payload+quant bytes --
+        # in accounting mode encode_stage depends only on the option)
+        self._head_s = {o: self.system.ue.compute_time_s(self.plan.head_flops(o))
+                        for o in self.plan.options}
+        self._enc = {o: encode_stage(self.plan, self.system, self.codec,
+                                     None, o, execute_model=False)
+                     for o in self.plan.options}
+        self.reset()
+
+    def reset(self):
+        """Restore seeded state (rngs, cloned controllers, stats) so every
+        ``run`` starts identically -- repeated runs on one simulator are
+        reproducible and comparisons stay rng-paired."""
+        self._rng = np.random.default_rng(self.seed)          # shared channel
+        seqs = np.random.SeedSequence(self.seed).spawn(self.n_ues)
+        self._ue_rngs = [np.random.default_rng(s) for s in seqs]
+        self._controllers = (self.controller.spawn(self.n_ues)
+                             if self.controller is not None else None)
+        if self._controllers and not isinstance(self.plan, SwinSplitPlan):
+            # non-Swin plans must not read the Swin calibration tables;
+            # point the cloned controllers at the plan's own accounting
+            for c in self._controllers:
+                if c.plan is None:
+                    c.plan = self.plan
+        self.stats = CellStats()
+
+    # -- one frame-slot -------------------------------------------------------
+    def step(self, levels, imgs=None, option: Optional[str] = None
+             ) -> Tuple[List[FrameLog], Dict[int, Any]]:
+        """Advance every UE by one frame.  ``levels``: scalar or (n_ues,)
+        interference; ``option``: fixed split for all UEs, or None to let
+        each UE's cloned controller decide."""
+        if option is not None and option not in self._head_s:
+            raise ValueError(f"unknown option {option!r}; "
+                             f"plan offers {self.plan.options}")
+        if self.execute_model and imgs is None:
+            raise ValueError("execute_model=True requires imgs "
+                             "(use execute_model=False for accounting sweeps)")
+        n = self.n_ues
+        levels = np.broadcast_to(np.asarray(levels, float), (n,))
+
+        # --- decide (per-UE controllers; sensing uses per-UE rngs) ----------
+        preds: List[Optional[Prediction]] = [None] * n
+        if option is None:
+            assert self._controllers is not None, \
+                "no fixed option and no controller template"
+            options = []
+            for i in range(n):
+                kpm, spec = sense_stage(levels[i], bool(self.narrowband[i]),
+                                        self._ue_rngs[i])
+                preds[i] = decide_stage(self._controllers[i], kpm, spec,
+                                        self.plan.options, levels[i], self.path)
+                options.append(preds[i].option)
+        else:
+            options = [option] * n
+
+        # --- head + encode (real per UE, or table lookups) -------------------
+        heads: List[HeadResult] = []
+        encs: List[EncodeResult] = []
+        for i, opt in enumerate(options):
+            if self.execute_model:
+                payload, local = self.plan.head(imgs[i % len(imgs)], opt)
+                head = HeadResult(head_s=self._head_s[opt], payload=payload,
+                                  local_out=local)
+                ctrl = self._controllers[i] if self._controllers else None
+                encs.append(encode_stage(self.plan, self.system, self.codec,
+                                         head.payload, opt, True, ctrl))
+            else:
+                head = HeadResult(head_s=self._head_s[opt], payload=None,
+                                  local_out=None)
+                encs.append(self._enc[opt])          # per-option cache
+            heads.append(head)
+
+        # --- uplink: one vectorized draw over the UE axis --------------------
+        comp_b = np.array([e.compressed_bytes for e in encs], float)
+        rates = self.system.channel.sample_rate(levels, self._rng,
+                                                narrowband=self.narrowband)
+        tx_s = self.system.channel.tx_time_s(comp_b, rates)
+        offload = np.array([o != UE_ONLY for o in options])
+        path_s = np.where(offload,
+                          self.path.sample_latency(self._rng, size=n), 0.0)
+        quant_s = np.array([e.quant_s for e in encs])
+        head_s = np.array([h.head_s for h in heads])
+        arrival = head_s + quant_s + tx_s + path_s
+
+        # --- edge: batched tails ---------------------------------------------
+        requests = [TailRequest(ue_id=i, option=options[i],
+                                arrival_s=float(arrival[i]),
+                                payload=encs[i].payload)
+                    for i in range(n) if offload[i]]
+        served, records = self.batcher.run_slot(requests)
+        self.stats.absorb_slot(records, served)
+
+        # --- account ----------------------------------------------------------
+        logs: List[FrameLog] = []
+        outputs: Dict[int, Any] = {}
+        for i, opt in enumerate(options):
+            up = UplinkResult(rate_bps=float(rates[i]), tx_s=float(tx_s[i]),
+                              path_s=float(path_s[i]))
+            if offload[i]:
+                sv = served[i]
+                tail_s, queue_s, batch = sv.tail_s, sv.queue_s, sv.batch_size
+                outputs[i] = sv.out
+            else:
+                tail_s, queue_s, batch = 0.0, 0.0, 1
+                outputs[i] = heads[i].local_out
+            logs.append(account_stage(
+                self.system, opt, float(levels[i]), heads[i], encs[i], up,
+                tail_s, queue_s=queue_s, batch_size=batch, ue_id=i,
+                predicted=preds[i]))
+        return logs, outputs
+
+    # -- traces ----------------------------------------------------------------
+    def run(self, interference, imgs=None, option: Optional[str] = None,
+            keep_outputs: bool = False) -> CellResult:
+        """``interference``: (n_frames,) shared trace or (n_frames, n_ues)
+        per-UE traces.  Resets seeded state first, so repeated ``run`` calls
+        on one simulator reproduce exactly."""
+        self.reset()
+        trace = np.asarray(interference, float)
+        if trace.ndim == 1:
+            trace = trace[:, None]
+        all_logs: List[FrameLog] = []
+        all_outs: List[Dict[int, Any]] = []
+        for t in range(trace.shape[0]):
+            frame_imgs = None
+            if imgs is not None:
+                frame_imgs = [imgs[(t + i) % len(imgs)]
+                              for i in range(self.n_ues)]
+            logs, outs = self.step(trace[t], imgs=frame_imgs, option=option)
+            all_logs.extend(logs)
+            if keep_outputs:
+                all_outs.append(outs)
+        return CellResult(logs=all_logs, stats=self.stats,
+                          outputs=all_outs if keep_outputs else None)
+
+
+def cell_interference_traces(n_frames: int, n_ues: int, seed: int = 0,
+                             levels: Sequence[float] = INTERFERENCE_LEVELS,
+                             p_move: float = 0.2) -> np.ndarray:
+    """Per-UE interference traces: independent sticky random walks over the
+    paper's jammer levels (each UE sees the jammer differently as it
+    moves through the cell).  Returns (n_frames, n_ues)."""
+    rng = np.random.default_rng(seed)
+    levels = np.asarray(levels, float)
+    idx = rng.integers(0, len(levels), size=n_ues)
+    out = np.empty((n_frames, n_ues))
+    for t in range(n_frames):
+        move = rng.random(n_ues) < p_move
+        step = rng.integers(-1, 2, size=n_ues)
+        idx = np.clip(idx + np.where(move, step, 0), 0, len(levels) - 1)
+        out[t] = levels[idx]
+    return out

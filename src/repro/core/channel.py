@@ -21,44 +21,52 @@ import numpy as np
 INTERFERENCE_LEVELS = (-40, -30, -20, -10, -5)
 
 
-def effective_level(interference_db: float, narrowband: bool) -> float:
+def effective_level(interference_db, narrowband):
     """Realized-throughput interference level.  A narrowband jammer
     concentrates its power on scheduled PRBs (retransmissions + link-
     adaptation thrash), hurting throughput MORE than the same total power
     spread wideband -- while wideband-averaged KPMs register it as LESS.
-    This asymmetry is exactly why KPM-only estimation fails (paper §I)."""
-    return interference_db + (6.0 if narrowband else 0.0)
+    This asymmetry is exactly why KPM-only estimation fails (paper §I).
+
+    Accepts scalars or per-UE arrays (``narrowband`` may be a bool array)."""
+    if np.ndim(interference_db) == 0 and np.ndim(narrowband) == 0:
+        return interference_db + (6.0 if narrowband else 0.0)
+    return np.asarray(interference_db, np.float64) + np.where(narrowband, 6.0, 0.0)
 
 
 @dataclass
 class ChannelModel:
-    """Uplink throughput vs interference, with log-normal fading."""
+    """Uplink throughput vs interference, with log-normal fading.
+
+    ``mean_rate`` / ``sample_rate`` / ``tx_time_s`` are vectorized over a
+    UE axis: pass a (n_ues,) array of interference levels and get a rate
+    array back.  The scalar path draws from ``rng`` exactly as the seeded
+    single-UE pipeline always has (one normal per call), so existing
+    paired-trace tests stay aligned; the array path draws one normal per
+    UE in index order."""
     # fitted in calibration.py to reproduce paper Fig. 4 (bits/s)
     rate_table: Dict[int, float] = field(default_factory=dict)
     fading_sigma: float = 0.08        # log-normal sigma on the rate
     min_rate: float = 1e6
 
-    def mean_rate(self, interference_db: float) -> float:
+    def mean_rate(self, interference_db):
         lv = sorted(self.rate_table)
-        if interference_db <= lv[0]:
-            return self.rate_table[lv[0]]
-        if interference_db >= lv[-1]:
-            return self.rate_table[lv[-1]]
-        for a, b in zip(lv, lv[1:]):
-            if a <= interference_db <= b:
-                t = (interference_db - a) / (b - a)
-                # throughput falls roughly geometrically with jamming power
-                return math.exp((1 - t) * math.log(self.rate_table[a])
-                                + t * math.log(self.rate_table[b]))
-        raise AssertionError
+        log_r = [math.log(self.rate_table[l]) for l in lv]
+        # throughput falls roughly geometrically with jamming power:
+        # linear interpolation in log-rate, clamped at the table ends
+        out = np.exp(np.interp(interference_db, lv, log_r))
+        return float(out) if np.ndim(interference_db) == 0 else out
 
-    def sample_rate(self, interference_db: float, rng: np.random.Generator,
-                    narrowband: bool = False) -> float:
+    def sample_rate(self, interference_db, rng: np.random.Generator,
+                    narrowband=False):
         r = self.mean_rate(effective_level(interference_db, narrowband))
-        r *= math.exp(rng.normal(0.0, self.fading_sigma))
-        return max(r, self.min_rate)
+        if np.ndim(r) == 0:
+            r *= math.exp(rng.normal(0.0, self.fading_sigma))
+            return max(r, self.min_rate)
+        r = r * np.exp(rng.normal(0.0, self.fading_sigma, size=np.shape(r)))
+        return np.maximum(r, self.min_rate)
 
-    def tx_time_s(self, n_bytes: int, rate_bps: float) -> float:
+    def tx_time_s(self, n_bytes, rate_bps):
         return n_bytes * 8.0 / rate_bps
 
 
@@ -69,14 +77,19 @@ class PathModel:
     base_s: float
     jitter_s: float
 
-    def sample_latency(self, rng: np.random.Generator) -> float:
+    def sample_latency(self, rng: np.random.Generator, size=None):
         # base + truncated-normal jitter + occasional queueing tail.
         # (fixed draw count per call so seeded traces stay aligned across
         # path models -- paired comparisons in tests/benches)
-        lat = self.base_s + abs(rng.normal(0.0, self.jitter_s))
-        burst = rng.random() < 0.05
-        tail = rng.exponential(self.jitter_s * 4)
-        return lat + (tail if burst else 0.0)
+        if size is None:
+            lat = self.base_s + abs(rng.normal(0.0, self.jitter_s))
+            burst = rng.random() < 0.05
+            tail = rng.exponential(self.jitter_s * 4)
+            return lat + (tail if burst else 0.0)
+        lat = self.base_s + np.abs(rng.normal(0.0, self.jitter_s, size=size))
+        burst = rng.random(size=size) < 0.05
+        tail = rng.exponential(self.jitter_s * 4, size=size)
+        return lat + np.where(burst, tail, 0.0)
 
 
 def dupf_path() -> PathModel:
@@ -105,18 +118,34 @@ class RadioKPM:
     bler: float
 
 
-def observe_kpms(interference_db: float, narrowband: bool,
-                 rng: np.random.Generator) -> RadioKPM:
+def observe_kpms(interference_db, narrowband, rng: np.random.Generator
+                 ) -> RadioKPM:
+    """Scalar inputs give a scalar KPM (byte-identical rng stream to the
+    original single-UE path); array inputs give a ``RadioKPM`` whose fields
+    are (n_ues,) arrays -- batch sensing for whole-cell analysis.  (The
+    adaptive cell decide loop stays per-UE: each UE senses from its own
+    seeded rng so traces are reproducible per UE.)"""
     # wideband SINR reacts to total interference power; narrowband jammers
     # hit only a few PRBs, so the wideband average underestimates the damage.
-    eff = interference_db if not narrowband else interference_db - 12.0
-    sinr = 22.0 + eff * 0.45 + rng.normal(0, 1.0)
+    if np.ndim(interference_db) == 0 and np.ndim(narrowband) == 0:
+        eff = interference_db if not narrowband else interference_db - 12.0
+        sinr = 22.0 + eff * 0.45 + rng.normal(0, 1.0)
+        return RadioKPM(
+            sinr_db=sinr,
+            rsrp_dbm=-78.0 + rng.normal(0, 2.0),
+            prb_util=min(1.0, max(0.0, 0.55 + 0.01 * interference_db + rng.normal(0, 0.05))),
+            mcs=max(0.0, min(27.0, 18 + 0.3 * eff + rng.normal(0, 1.0))),
+            bler=min(1.0, max(0.0, 0.08 - 0.004 * eff + rng.normal(0, 0.02))),
+        )
+    lvl = np.asarray(interference_db, np.float64)
+    eff = np.where(narrowband, lvl - 12.0, lvl)
+    n = eff.shape
     return RadioKPM(
-        sinr_db=sinr,
-        rsrp_dbm=-78.0 + rng.normal(0, 2.0),
-        prb_util=min(1.0, max(0.0, 0.55 + 0.01 * interference_db + rng.normal(0, 0.05))),
-        mcs=max(0.0, min(27.0, 18 + 0.3 * eff + rng.normal(0, 1.0))),
-        bler=min(1.0, max(0.0, 0.08 - 0.004 * eff + rng.normal(0, 0.02))),
+        sinr_db=22.0 + eff * 0.45 + rng.normal(0, 1.0, n),
+        rsrp_dbm=-78.0 + rng.normal(0, 2.0, n),
+        prb_util=np.clip(0.55 + 0.01 * lvl + rng.normal(0, 0.05, n), 0.0, 1.0),
+        mcs=np.clip(18 + 0.3 * eff + rng.normal(0, 1.0, n), 0.0, 27.0),
+        bler=np.clip(0.08 - 0.004 * eff + rng.normal(0, 0.02, n), 0.0, 1.0),
     )
 
 

@@ -35,12 +35,17 @@ class TensorMeta:
 
 @dataclass
 class CompressedPayload:
-    """What actually crosses the uplink."""
+    """What actually crosses the uplink.
+
+    ``mode`` records the codec mode the payload was produced with, so the
+    receiver decodes it correctly even if its own codec was constructed
+    with a different default (None = legacy payload, decoder's mode wins)."""
     blobs: List[bytes]                 # zlib(int8 blocks), one per tensor
     scales: List[np.ndarray]           # f32 per-block scales (shipped raw)
     meta: List[TensorMeta]
     raw_bytes: int                     # payload size before compression
     treedef: Any = None
+    mode: Optional[str] = None
 
     @property
     def compressed_bytes(self) -> int:
@@ -109,22 +114,26 @@ class ActivationCodec:
             scales.append(np.asarray(s))
             metas.append(TensorMeta(tuple(x.shape), str(x.dtype), int(n),
                                     int(q.shape[0]), int(q.shape[1])))
-        return CompressedPayload(blobs, scales, metas, raw, treedef)
+        return CompressedPayload(blobs, scales, metas, raw, treedef,
+                                 mode=self.mode)
 
     # -- decompress ----------------------------------------------------------
     def decompress(self, p: CompressedPayload):
+        # the payload is self-describing: honor the mode it was encoded
+        # with, not whatever this codec instance happens to default to
+        mode = p.mode if p.mode is not None else self.mode
         leaves = []
         for blob, s, m in zip(p.blobs, p.scales, p.meta):
-            if self.mode == "raw":
+            if mode == "raw":
                 x = np.frombuffer(blob, dtype=m.dtype).reshape(m.shape)
                 leaves.append(jnp.asarray(x))
                 continue
-            if self.mode == "zlib":
+            if mode == "zlib":
                 x = np.frombuffer(zlib.decompress(blob), dtype=m.dtype)
                 leaves.append(jnp.asarray(x.reshape(m.shape)))
                 continue
-            raw = blob if self.mode == "int8" else zlib.decompress(blob)
-            if self.mode == "int8_delta_zlib" and len(m.shape) >= 3:
+            raw = blob if mode == "int8" else zlib.decompress(blob)
+            if mode == "int8_delta_zlib" and len(m.shape) >= 3:
                 n_valid = int(np.prod(m.shape))
                 d = np.frombuffer(raw[:n_valid], dtype=np.uint8).reshape(m.shape)
                 axis = 1 if m.shape[0] < 4 else 0

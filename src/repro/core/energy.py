@@ -19,9 +19,28 @@ class DeviceProfile:
     flops_per_s: float          # sustained effective throughput
     power_active_w: float       # package power while inferring
     power_idle_w: float = 2.0
+    # per-invocation dispatch cost (kernel launch + weight streaming).  The
+    # paper's single-UE fit folds this into flops_per_s, so it defaults to
+    # 0; the multi-UE cell sets it on the edge profile -- it is exactly what
+    # micro-batching amortizes.
+    launch_overhead_s: float = 0.0
+    # batch-throughput saturation: ``flops_per_s`` is the *measured batch-1
+    # effective* rate, which underutilizes a wide accelerator; stacking B
+    # items raises effective throughput by (1+k)*B/(B+k) -- exactly 1x at
+    # B=1 (the paper's calibration point), saturating at (1+k)x.  k=0 keeps
+    # the model linear (no batching benefit beyond launch amortization).
+    batch_sat: float = 0.0
 
     def compute_time_s(self, flops: float) -> float:
         return flops / self.flops_per_s
+
+    def batch_compute_time_s(self, flops_per_item: float, batch: int = 1) -> float:
+        """One invocation serving ``batch`` stacked items."""
+        if batch <= 0:
+            return 0.0
+        k = self.batch_sat
+        compute = (batch + k) / (1.0 + k) * flops_per_item / self.flops_per_s
+        return self.launch_overhead_s + compute
 
     def compute_energy_j(self, flops: float) -> float:
         return self.compute_time_s(flops) * self.power_active_w

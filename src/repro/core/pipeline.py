@@ -4,6 +4,14 @@ Per frame:  sense radio -> estimate throughput (ML) -> AF picks split ->
 head (UE) -> Pallas INT8 quant + zlib -> uplink (dUPF or cUPF path) ->
 tail (edge) -> detections; log delay / energy / privacy / payload.
 
+The frame is decomposed into reusable stages
+
+    sense -> decide -> head -> encode -> uplink -> tail -> account
+
+so ``SplitInferencePipeline.run_frame`` is a straight composition and the
+multi-UE ``core/cell.py`` simulator reuses the same stages per UE while
+deferring the tail to the edge server's micro-batcher.
+
 Model execution and compression are REAL (actual Swin forward + codec on
 this host); time and energy are *accounted* with the calibrated device and
 channel models, exactly like the paper's measurement harness (we cannot
@@ -13,9 +21,8 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
-import jax
 import numpy as np
 
 from repro.core.adaptive import AdaptiveController, Objective, Prediction
@@ -24,7 +31,7 @@ from repro.core.channel import (PathModel, RadioKPM, dupf_path,
                                 iq_spectrogram, observe_kpms)
 from repro.core.compression import ActivationCodec
 from repro.core.privacy import payload_privacy
-from repro.core.splitting import SERVER_ONLY, UE_ONLY, SwinSplitPlan
+from repro.core.splitting import SERVER_ONLY, UE_ONLY, SplitPlan, SwinSplitPlan
 from repro.core.throughput import ThroughputEstimator, train_estimator
 
 
@@ -44,15 +51,147 @@ class FrameLog:
     compressed_bytes: int
     rate_bps: float
     predicted: Optional[Prediction] = None
+    # multi-UE cell extensions (defaults keep the single-UE pipeline as-is)
+    ue_id: int = 0
+    queue_s: float = 0.0        # wait at the edge before the tail batch ran
+    batch_size: int = 1         # occupancy of the tail batch that served us
 
     @property
     def energy_j(self) -> float:
         return self.energy_inf_j + self.energy_tx_j
 
 
+# ---------------------------------------------------------------------------
+# stages -- each is a pure function of (plan/system/...) usable per-UE
+# ---------------------------------------------------------------------------
+
+@dataclass
+class HeadResult:
+    head_s: float
+    payload: Any                 # boundary pytree (None for UE_ONLY)
+    local_out: Any               # detections when the UE ran everything
+
+
+@dataclass
+class EncodeResult:
+    quant_s: float
+    raw_bytes: int
+    compressed_bytes: int
+    payload: Any                 # server-side view (post codec roundtrip)
+
+
+@dataclass
+class UplinkResult:
+    rate_bps: float
+    tx_s: float
+    path_s: float
+
+
+def sense_stage(interference_db: float, narrowband: bool,
+                rng: np.random.Generator) -> Tuple[RadioKPM, np.ndarray]:
+    """Sample what the RAN exposes this frame: KPMs + IQ spectrogram."""
+    kpm = observe_kpms(interference_db, narrowband, rng)
+    spec = iq_spectrogram(interference_db, narrowband, rng)
+    return kpm, spec
+
+
+def decide_stage(controller: AdaptiveController, kpm: RadioKPM, spec,
+                 options: List[str], interference_db: float,
+                 path: PathModel) -> Prediction:
+    """AF split selection from the sensed radio state."""
+    controller.interference_db = interference_db
+    controller.path = path
+    return controller.decide(kpm, spec, options)
+
+
+def head_stage(plan: SplitPlan, system: Calibrated, img, option: str,
+               execute_model: bool) -> HeadResult:
+    """UE-side forward up to the split boundary (accounted UE time)."""
+    head_s = system.ue.compute_time_s(plan.head_flops(option))
+    payload = local = None
+    if execute_model:
+        payload, local = plan.head(img, option)
+    return HeadResult(head_s=head_s, payload=payload, local_out=local)
+
+
+def encode_stage(plan: SplitPlan, system: Calibrated, codec: ActivationCodec,
+                 payload, option: str, execute_model: bool,
+                 controller: Optional[AdaptiveController] = None) -> EncodeResult:
+    """INT8+zlib the boundary payload (or account its size via
+    ``Calibrated.payload_bytes`` -- tables for the calibrated Swin plan,
+    spec-based estimates for any other plan)."""
+    if option == UE_ONLY:
+        return EncodeResult(0.0, 0, 0, None)
+    if option == SERVER_ONLY:
+        raw, comp = system.payload_bytes(plan, SERVER_ONLY)
+        return EncodeResult(0.0, raw, comp, payload)
+    if execute_model:
+        t0 = time.perf_counter()
+        comp = codec.compress(payload)
+        quant_s = time.perf_counter() - t0
+        payload = codec.decompress(comp)             # server view
+        if controller is not None:
+            controller.observe_ratio(comp.compressed_bytes, comp.raw_bytes)
+        return EncodeResult(quant_s, comp.raw_bytes, comp.compressed_bytes,
+                            payload)
+    raw, comp = system.payload_bytes(plan, option, codec)
+    return EncodeResult(0.010, raw, comp, payload)
+
+
+def uplink_stage(system: Calibrated, path: PathModel, compressed_bytes: int,
+                 interference_db: float, narrowband: bool,
+                 rng: np.random.Generator, option: str) -> UplinkResult:
+    """Radio transmission + user-plane path traversal."""
+    rate = system.channel.sample_rate(interference_db, rng,
+                                      narrowband=narrowband)
+    tx_s = system.channel.tx_time_s(compressed_bytes, rate) \
+        if compressed_bytes else 0.0
+    path_s = path.sample_latency(rng) if option != UE_ONLY else 0.0
+    return UplinkResult(rate_bps=rate, tx_s=tx_s, path_s=path_s)
+
+
+def tail_stage(plan: SplitPlan, system: Calibrated, payload, option: str,
+               execute_model: bool) -> Tuple[float, Any]:
+    """Edge-side tail (single-UE path; the cell batches this instead)."""
+    tail_s = system.edge.compute_time_s(plan.tail_flops(option))
+    out = None
+    if execute_model and option != UE_ONLY:
+        out = plan.tail(payload, option)
+    return tail_s, out
+
+
+def account_stage(system: Calibrated, option: str, interference_db: float,
+                  head: HeadResult, enc: EncodeResult, up: UplinkResult,
+                  tail_s: float, *, queue_s: float = 0.0, batch_size: int = 1,
+                  ue_id: int = 0, predicted: Optional[Prediction] = None
+                  ) -> FrameLog:
+    """Fold stage timings into delay + energy, paper §V style.
+
+    The UE power analyzer integrates over the whole frame interval: active
+    while computing, idle while waiting for uplink + edge (incl. any cell
+    queueing delay)."""
+    wait_s = up.tx_s + up.path_s + queue_s + tail_s
+    e_inf = (system.ue.power_active_w * head.head_s
+             + system.ue.power_idle_w * wait_s)
+    e_tx = system.radio.tx_energy_j(up.tx_s, interference_db)
+    return FrameLog(option=option, interference_db=interference_db,
+                    delay_s=head.head_s + enc.quant_s + up.tx_s + up.path_s
+                    + queue_s + tail_s,
+                    head_s=head.head_s, quant_s=enc.quant_s, tx_s=up.tx_s,
+                    path_s=up.path_s, tail_s=tail_s,
+                    energy_inf_j=e_inf, energy_tx_j=e_tx,
+                    raw_bytes=enc.raw_bytes, compressed_bytes=enc.compressed_bytes,
+                    rate_bps=up.rate_bps, predicted=predicted,
+                    ue_id=ue_id, queue_s=queue_s, batch_size=batch_size)
+
+
+# ---------------------------------------------------------------------------
+# single-UE pipeline: the stages composed (the paper's testbed)
+# ---------------------------------------------------------------------------
+
 @dataclass
 class SplitInferencePipeline:
-    plan: SwinSplitPlan
+    plan: SplitPlan
     system: Calibrated
     codec: ActivationCodec
     controller: Optional[AdaptiveController] = None
@@ -68,62 +207,24 @@ class SplitInferencePipeline:
     def run_frame(self, img, interference_db: float,
                   option: Optional[str] = None) -> FrameLog:
         rng = self._rng
-        kpm = observe_kpms(interference_db, self.narrowband, rng)
-        spec = iq_spectrogram(interference_db, self.narrowband, rng)
+        kpm, spec = sense_stage(interference_db, self.narrowband, rng)
         pred = None
         if option is None:
             assert self.controller is not None
-            self.controller.interference_db = interference_db
-            self.controller.path = self.path
-            pred = self.controller.decide(kpm, spec, self.plan.options)
+            pred = decide_stage(self.controller, kpm, spec, self.plan.options,
+                                interference_db, self.path)
             option = pred.option
 
-        # --- UE side ---------------------------------------------------------
-        head_s = self.system.ue.compute_time_s(self.plan.head_flops(option))
-        quant_s = 0.0
-        raw_b = comp_b = 0
-        payload = None
-        if self.execute_model:
-            payload, local_det = self.plan.head(img, option)
-        if option not in (UE_ONLY,):
-            if option == SERVER_ONLY:
-                raw_b = comp_b = self.system.compressed_bytes[SERVER_ONLY]
-            elif self.execute_model:
-                t0 = time.perf_counter()
-                comp = self.codec.compress(payload)
-                quant_s = time.perf_counter() - t0
-                raw_b, comp_b = comp.raw_bytes, comp.compressed_bytes
-                payload = self.codec.decompress(comp)    # server view
-                if self.controller is not None:
-                    self.controller.observe_ratio(comp_b, raw_b)
-            else:
-                raw_b = self.system.raw_bytes[option]
-                comp_b = self.system.compressed_bytes[option]
-                quant_s = 0.010
-
-        # --- uplink + path -----------------------------------------------------
-        rate = self.system.channel.sample_rate(interference_db, rng,
-                                               narrowband=self.narrowband)
-        tx_s = self.system.channel.tx_time_s(comp_b, rate) if comp_b else 0.0
-        path_s = self.path.sample_latency(rng) if option != UE_ONLY else 0.0
-
-        # --- edge side ----------------------------------------------------------
-        tail_s = self.system.edge.compute_time_s(self.plan.tail_flops(option))
-        if self.execute_model and option != UE_ONLY:
-            _ = self.plan.tail(payload, option)
-
-        # the UE power analyzer integrates over the whole frame interval:
-        # active while computing, idle while waiting for uplink + edge
-        e_inf = (self.system.ue.power_active_w * head_s
-                 + self.system.ue.power_idle_w * (tx_s + path_s + tail_s))
-        e_tx = self.system.radio.tx_energy_j(tx_s, interference_db)
-        return FrameLog(option=option, interference_db=interference_db,
-                        delay_s=head_s + quant_s + tx_s + path_s + tail_s,
-                        head_s=head_s, quant_s=quant_s, tx_s=tx_s,
-                        path_s=path_s, tail_s=tail_s,
-                        energy_inf_j=e_inf, energy_tx_j=e_tx,
-                        raw_bytes=raw_b, compressed_bytes=comp_b,
-                        rate_bps=rate, predicted=pred)
+        head = head_stage(self.plan, self.system, img, option,
+                          self.execute_model)
+        enc = encode_stage(self.plan, self.system, self.codec, head.payload,
+                           option, self.execute_model, self.controller)
+        up = uplink_stage(self.system, self.path, enc.compressed_bytes,
+                          interference_db, self.narrowband, rng, option)
+        tail_s, _ = tail_stage(self.plan, self.system, enc.payload, option,
+                               self.execute_model)
+        return account_stage(self.system, option, interference_db,
+                             head, enc, up, tail_s, predicted=pred)
 
     # -- traces ------------------------------------------------------------------
     def run_trace(self, imgs, interference_trace, option: Optional[str] = None
@@ -141,8 +242,9 @@ def build_pipeline(cfg=None, params=None, *, adaptive: bool = True,
                    privacy_profile: Optional[Dict[str, float]] = None,
                    system: Optional[Calibrated] = None) -> SplitInferencePipeline:
     """Assemble the full system (used by examples/ and benchmarks/)."""
-    import jax.numpy as jnp
+    import jax
     from repro.configs.swin_t_detection import CONFIG, reduced
+
     from repro.models import swin as SW
 
     system = system or calibrate()
@@ -154,15 +256,25 @@ def build_pipeline(cfg=None, params=None, *, adaptive: bool = True,
     codec = ActivationCodec()
     controller = None
     if adaptive:
-        est = train_estimator(system.channel, "kpm+spec", n_train=1024,
-                              steps=200, seed=seed)
-        prof = privacy_profile or {UE_ONLY: 0.0, SERVER_ONLY: 1.0,
-                                   "split1": 0.53, "split2": 0.42,
-                                   "split3": 0.33, "split4": 0.27}
-        controller = AdaptiveController(
-            system=system, estimator=est,
-            objective=objective or Objective(),
-            path=path or dupf_path(), privacy_profile=prof)
+        controller = build_controller(system, path=path, objective=objective,
+                                      seed=seed, privacy_profile=privacy_profile)
     return SplitInferencePipeline(
         plan=plan, system=system, codec=codec, controller=controller,
         path=path or dupf_path(), seed=seed, execute_model=execute_model)
+
+
+def build_controller(system: Calibrated, *, path: Optional[PathModel] = None,
+                     objective: Optional[Objective] = None, seed: int = 0,
+                     privacy_profile: Optional[Dict[str, float]] = None
+                     ) -> AdaptiveController:
+    """Train the throughput estimator and wire up one AF controller.
+    ``AdaptiveController.clone()`` spawns per-UE copies that share it."""
+    est = train_estimator(system.channel, "kpm+spec", n_train=1024,
+                          steps=200, seed=seed)
+    prof = privacy_profile or {UE_ONLY: 0.0, SERVER_ONLY: 1.0,
+                               "split1": 0.53, "split2": 0.42,
+                               "split3": 0.33, "split4": 0.27}
+    return AdaptiveController(
+        system=system, estimator=est,
+        objective=objective or Objective(),
+        path=path or dupf_path(), privacy_profile=prof)

@@ -1,6 +1,8 @@
 """Split plans: partition an unmodified model's forward pass at a boundary.
 
-The paper's mechanism, generalized over the model zoo:
+The paper's mechanism, generalized over the model zoo behind one
+``SplitPlan`` protocol (options, head/tail execution, flop + payload
+accounting, and batched tail execution for the multi-UE cell):
 
   * ``SwinSplitPlan`` -- the paper's own setting: split the Swin detection
     backbone at {after patch-embed, after stage 1..4}; the FPN/RPN-style
@@ -13,13 +15,19 @@ The paper's mechanism, generalized over the model zoo:
     recurrent state of head-side layers is part of the handoff payload
     (accounted by ``payload_specs``) -- see DESIGN.md §Arch-applicability.
 
+Per-frame workload differences between the families (an image frame vs. an
+``n_tokens`` LM prefill) live in a ``Workload`` descriptor attached to the
+plan, so every accounting method takes only ``option`` and anything above
+this layer (pipeline, cell simulator, adaptive controller) is plan-generic.
+
 No retraining, no weight surgery: head and tail tree-slice the *same*
 parameter pytree.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Dict, List, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -39,15 +47,127 @@ def split_option(l: int) -> str:
 
 
 # ===========================================================================
+# The protocol + shared machinery
+# ===========================================================================
+
+@dataclass(frozen=True)
+class Workload:
+    """What one frame of work means for a plan.
+
+    Swin processes one image per frame (``n_tokens`` unused, kept at 1);
+    LM plans process an ``n_tokens`` prefill per frame.  ``include_state``
+    adds the recurrent state of head-side SSM/hybrid layers to the payload
+    accounting (it must ship whenever the split point moves).
+    """
+    n_tokens: int = 1
+    include_state: bool = False
+
+
+@runtime_checkable
+class SplitPlan(Protocol):
+    """Uniform interface every split plan implements.
+
+    ``head``/``tail`` execute the partitioned forward; ``tail_batched``
+    stacks same-option payloads from many UEs and runs ONE jitted tail
+    forward (the edge server's micro-batching entry); the ``*_flops`` /
+    ``payload_specs`` family is pure accounting over ``self.workload``.
+    """
+    params: Any
+    workload: Workload
+
+    @property
+    def options(self) -> List[str]: ...
+    def head(self, inputs, option: str) -> Tuple[Any, Any]: ...
+    def tail(self, payload, option: str) -> Any: ...
+    def tail_batched(self, payloads: Sequence[Any], option: str,
+                     pad_to: Optional[int] = None) -> List[Any]: ...
+    def head_flops(self, option: str) -> float: ...
+    def tail_flops(self, option: str) -> float: ...
+    def payload_specs(self, option: str) -> List[Tuple[Tuple[int, ...], str]]: ...
+    def raw_payload_bytes(self, option: str, batch: int = 1) -> int: ...
+
+
+def payload_batch(payload) -> int:
+    """Leading (batch) dim of a payload pytree."""
+    leaf = jax.tree.leaves(payload)[0]
+    return int(leaf.shape[0])
+
+
+def stack_payloads(payloads: Sequence[Any], pad_to: Optional[int] = None):
+    """Concatenate same-structure payloads along the batch axis, optionally
+    zero-padding to ``pad_to`` rows (bucketed batch sizes keep the jitted
+    tail from retracing on every occupancy)."""
+    stacked = jax.tree.map(
+        lambda *xs: jnp.concatenate([jnp.asarray(x) for x in xs], axis=0),
+        *payloads)
+    total = sum(payload_batch(p) for p in payloads)
+    if pad_to is not None and pad_to > total:
+        pad = pad_to - total
+        stacked = jax.tree.map(
+            lambda a: jnp.concatenate(
+                [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0),
+            stacked)
+    return stacked
+
+
+def unstack_outputs(out, sizes: Sequence[int]) -> List[Any]:
+    """Slice a batched tail output back into per-payload outputs."""
+    outs, off = [], 0
+    for n in sizes:
+        outs.append(jax.tree.map(lambda a, o=off, n=n: a[o:o + n], out))
+        off += n
+    return outs
+
+
+class _PlanBase:
+    """Shared protocol plumbing: byte accounting and batched tail execution
+    on top of each plan's ``payload_specs`` / ``_tail_impl``."""
+
+    def raw_payload_bytes(self, option: str, batch: int = 1) -> int:
+        return batch * sum(int(np.prod(s)) * np.dtype(d).itemsize
+                           for s, d in self.payload_specs(option))
+
+    def tail(self, payload, option: str):
+        return self._tail_impl(self.params, payload, option)
+
+    def tail_batched(self, payloads: Sequence[Any], option: str,
+                     pad_to: Optional[int] = None) -> List[Any]:
+        """Stack same-option payloads and run ONE jitted tail forward.
+
+        Returns per-payload outputs in input order.  ``pad_to`` zero-pads
+        the stacked batch (padding rows are dropped from the outputs); the
+        jit cache is keyed per (option, executed batch) by tracing, so
+        callers should pad to a small set of bucket sizes.
+        """
+        assert self.params is not None, "tail_batched needs real params"
+        sizes = [payload_batch(p) for p in payloads]
+        total = sum(sizes)
+        stacked = stack_payloads(payloads, pad_to=pad_to)
+        out = self._tail_jitted(option)(self.params, stacked)
+        if pad_to is not None and pad_to > total:
+            out = jax.tree.map(lambda a: a[:total], out)
+        return unstack_outputs(out, sizes)
+
+    def _tail_jitted(self, option: str):
+        cache = self.__dict__.setdefault("_tail_jit_cache", {})
+        if option not in cache:
+            cache[option] = jax.jit(
+                lambda params, payload, _o=option:
+                    self._tail_impl(params, payload, _o))
+        return cache[option]
+
+
+# ===========================================================================
 # Swin (the paper's model)
 # ===========================================================================
 
 @dataclass
-class SwinSplitPlan:
+class SwinSplitPlan(_PlanBase):
     cfg: SwinConfig
     params: Any
     ship_merged: bool = True          # False = beyond-paper payload opt
     include_early_split: bool = False  # split0 (after patch embed, paper §IV-B)
+    workload: Workload = field(default_factory=Workload)
 
     @property
     def options(self) -> List[str]:
@@ -66,11 +186,17 @@ class SwinSplitPlan:
                                 ship_merged=self.ship_merged)
         return payload, None
 
-    def tail(self, payload, option: str):
+    def _tail_impl(self, params, payload, option: str):
         if option == SERVER_ONLY:
-            return SW.forward_full(self.cfg, self.params, payload["img"])
+            return SW.forward_full(self.cfg, params, payload["img"])
         l = int(option.removeprefix("split"))
-        return SW.tail_apply(self.cfg, self.params, payload, l)
+        return SW.tail_apply(self.cfg, params, payload, l)
+
+    def _tail_jitted(self, option: str):
+        if option not in (UE_ONLY, SERVER_ONLY):
+            # share the model-level trace cache across plan instances
+            return SW.tail_apply_jit(self.cfg, int(option.removeprefix("split")))
+        return super()._tail_jitted(option)
 
     # -- accounting ----------------------------------------------------------
     def head_flops(self, option: str) -> int:
@@ -98,10 +224,6 @@ class SwinSplitPlan:
                 for s in SW.boundary_shapes(self.cfg, l,
                                             ship_merged=self.ship_merged)]
 
-    def raw_payload_bytes(self, option: str, batch: int = 1) -> int:
-        return batch * sum(int(np.prod(s)) * np.dtype(d).itemsize
-                           for s, d in self.payload_specs(option))
-
 
 # ===========================================================================
 # LM-family archs (technique generalization)
@@ -114,10 +236,11 @@ def default_candidates(cfg: ModelConfig) -> Tuple[int, ...]:
 
 
 @dataclass
-class LMSplitPlan:
+class LMSplitPlan(_PlanBase):
     cfg: ModelConfig
     params: Any
     candidates: Tuple[int, ...] = ()
+    workload: Workload = field(default_factory=lambda: Workload(n_tokens=128))
 
     def __post_init__(self):
         if not self.candidates:
@@ -136,7 +259,7 @@ class LMSplitPlan:
             B, S = h.shape[:2]
             pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
             h, _, _ = T.forward_slice(cfg, self.params, h, pos, 0, cfg.n_layers)
-            return None, self._finish(h)
+            return None, self._finish(self.params, h)
         if option == SERVER_ONLY:
             return dict(batch), None
         l = int(option.removeprefix("split"))
@@ -146,26 +269,25 @@ class LMSplitPlan:
         h, _, _ = T.forward_slice(cfg, self.params, h, pos, 0, l)
         return {"h": h}, None
 
-    def tail(self, payload, option: str):
+    def _tail_impl(self, params, payload, option: str):
         cfg = self.cfg
         if option == SERVER_ONLY:
-            batch = payload
-            h = T.embed_inputs(cfg, self.params, batch)
+            h = T.embed_inputs(cfg, params, payload)
             B, S = h.shape[:2]
             pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-            h, _, _ = T.forward_slice(cfg, self.params, h, pos, 0, cfg.n_layers)
-            return self._finish(h)
+            h, _, _ = T.forward_slice(cfg, params, h, pos, 0, cfg.n_layers)
+            return self._finish(params, h)
         l = int(option.removeprefix("split"))
         h = payload["h"]
         B, S = h.shape[:2]
         pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-        h, _, _ = T.forward_slice(cfg, self.params, h, pos, l, cfg.n_layers)
-        return self._finish(h)
+        h, _, _ = T.forward_slice(cfg, params, h, pos, l, cfg.n_layers)
+        return self._finish(params, h)
 
-    def _finish(self, h):
+    def _finish(self, params, h):
         from repro.models.layers import rms_norm
-        h = rms_norm(h, self.params["final_norm"], self.cfg.norm_eps)
-        return T.unembed(self.cfg, self.params, h[:, -1:])
+        h = rms_norm(h, params["final_norm"], self.cfg.norm_eps)
+        return T.unembed(self.cfg, params, h[:, -1:])
 
     # -- accounting ----------------------------------------------------------
     def _layer_flops(self) -> float:
@@ -174,27 +296,29 @@ class LMSplitPlan:
         n_active = count_active_params(self.cfg)
         return 2.0 * n_active / self.cfg.n_layers
 
-    def head_flops(self, option: str, n_tokens: int) -> float:
+    def head_flops(self, option: str) -> float:
         if option == UE_ONLY:
-            return self._layer_flops() * self.cfg.n_layers * n_tokens
+            return (self._layer_flops() * self.cfg.n_layers
+                    * self.workload.n_tokens)
         if option == SERVER_ONLY:
             return 0.0
         l = int(option.removeprefix("split"))
-        return self._layer_flops() * l * n_tokens
+        return self._layer_flops() * l * self.workload.n_tokens
 
-    def tail_flops(self, option: str, n_tokens: int) -> float:
-        total = self._layer_flops() * self.cfg.n_layers * n_tokens
-        return total - self.head_flops(option, n_tokens)
+    def tail_flops(self, option: str) -> float:
+        total = (self._layer_flops() * self.cfg.n_layers
+                 * self.workload.n_tokens)
+        return total - self.head_flops(option)
 
-    def payload_specs(self, option: str, seq_len: int,
-                      include_state: bool = False):
+    def payload_specs(self, option: str) -> List[Tuple[Tuple[int, ...], str]]:
         cfg = self.cfg
+        seq_len = self.workload.n_tokens
         if option == UE_ONLY:
             return []
         if option == SERVER_ONLY:
             return [((seq_len,), "int32")]
         specs = [((seq_len, cfg.d_model), cfg.dtype)]
-        if include_state and cfg.family in ("ssm", "hybrid"):
+        if self.workload.include_state and cfg.family in ("ssm", "hybrid"):
             l = int(option.removeprefix("split"))
             # recurrent state of head-side layers ships on split move
             di = cfg.ssm_expand * cfg.d_model

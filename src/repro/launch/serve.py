@@ -28,7 +28,7 @@ def main(argv=None):
     from repro.configs import get_config, get_reduced_config
     from repro.configs.base import InputShape
     from repro.core.compression import ActivationCodec
-    from repro.core.splitting import LMSplitPlan, split_option
+    from repro.core.splitting import LMSplitPlan, Workload, split_option
     from repro.launch.mesh import make_host_mesh
     from repro.launch.steps import build_decode_step, build_prefill
     from repro.models.registry import get_model
@@ -47,7 +47,8 @@ def main(argv=None):
         # the paper's technique on the LM: head layers on the UE, boundary
         # activation through the INT8+zlib codec, tail on the edge.
         l = max(1, int(cfg.n_layers * args.split))
-        plan = LMSplitPlan(cfg, params, candidates=(l,))
+        plan = LMSplitPlan(cfg, params, candidates=(l,),
+                           workload=Workload(n_tokens=args.prompt_len))
         codec = ActivationCodec()
         t0 = time.perf_counter()
         payload, _ = plan.head(batch, split_option(l))
@@ -75,10 +76,7 @@ def main(argv=None):
         outs = []
         t0 = time.perf_counter()
         for i in range(args.gen):
-            if cfg.frontend == "audio_frames":
-                step_batch = {"tokens": tok}
-            else:
-                step_batch = {"tokens": tok}
+            step_batch = {"tokens": tok}
             logits, caches = decode(params, caches, step_batch,
                                     jnp.asarray(args.prompt_len + i, jnp.int32))
             tok = jnp.argmax(logits[:, -1:] if logits.ndim == 3 else logits,

@@ -310,6 +310,22 @@ def forward_full(cfg: SwinConfig, params, img):
     return tail_apply(cfg, params, head_apply(cfg, params, img, 0), 0)
 
 
+# -- batched tail entry (edge-server micro-batching) -------------------------
+
+_TAIL_JIT: Dict[Tuple[SwinConfig, int], Any] = {}
+
+
+def tail_apply_jit(cfg: SwinConfig, split: int):
+    """Cached jitted ``tail_apply`` for one (config, split).  The edge
+    server's batcher calls this once per micro-batch; padding occupancies
+    to bucketed batch sizes keeps the trace cache small."""
+    key = (cfg, split)
+    if key not in _TAIL_JIT:
+        _TAIL_JIT[key] = jax.jit(
+            lambda params, boundary: tail_apply(cfg, params, boundary, split))
+    return _TAIL_JIT[key]
+
+
 # ---------------------------------------------------------------------------
 # FPN + FCOS-style head
 # ---------------------------------------------------------------------------

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test dep; skip module without it
 from hypothesis import given, settings, strategies as st
 
 from repro.optim.adamw import AdamW
