@@ -1,8 +1,31 @@
-"""Paper Fig. 3: intermediate payload size, raw vs compressed, per split.
+"""Paper Fig. 3 + codec hot path: payload sizes and encode/decode wall time.
 
-Runs the REAL full-size Swin-T head on a realistic video frame and the
-real codec.  Reports the paper-faithful pipeline (INT8+zlib) and the
-beyond-paper delta-filtered variant side by side (§Perf-codec).
+Runs the REAL Swin-T head on a realistic video frame and the real codec,
+twice per split payload:
+
+  * LEGACY per-tensor loop (``fused=False``): one quant launch, one
+    device->host transfer and one zlib call per boundary tensor, host-side
+    delta filter -- the paper-faithful but serial baseline.
+  * FUSED single-launch path (default): every leaf packed into one device
+    pass (kernels/codec.py), one transfer, one zlib call.
+
+Reports the paper-faithful pipeline (INT8+zlib) and the beyond-paper
+delta-filtered variant side by side, verifies the two paths decode to
+BIT-IDENTICAL tensors, and asserts the fused encode is >= 2x faster.
+Rows land in results/bench_compression.json (the codec perf trajectory;
+fast mode writes bench_compression_fast.json so the harness never
+overwrites the full-size numbers).
+
+Attribution note for off-TPU runs: the legacy loop pays per-leaf
+interpret-mode Pallas dispatch (its real shipped cost on this host),
+while the fused path runs one native-XLA executable -- so the measured
+gap bundles the launch-count reduction WITH the per-launch overhead it
+amortizes.  That is the point of the design (on TPU the per-launch
+dispatch + per-leaf transfer play the same role), but don't read the
+ratio as pure kernel-fusion gain.
+
+    PYTHONPATH=src python -m benchmarks.bench_compression          # full size
+    PYTHONPATH=src python -m benchmarks.bench_compression --fast   # reduced
 """
 from __future__ import annotations
 
@@ -10,23 +33,39 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import csv_line, save
-from repro.configs.swin_t_detection import CONFIG
+from repro.configs.swin_t_detection import CONFIG, reduced
 from repro.core.compression import ActivationCodec
 from repro.core.splitting import SwinSplitPlan, SERVER_ONLY, UE_ONLY
 from repro.data.video import SyntheticVideo, VideoConfig
 from repro.models import swin as SW
 
+MODES = ("int8_zlib", "int8_delta_zlib")
 
-def run(fast: bool = False):
-    cfg = CONFIG
+
+def _best_of(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())   # async dispatch must not stop the clock
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _bit_identical(a_tree, b_tree) -> bool:
+    return all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(a_tree),
+                               jax.tree.leaves(b_tree)))
+
+
+def run(fast: bool = False, reps: int = 3):
+    cfg = reduced() if fast else CONFIG
     params = SW.init(cfg, jax.random.PRNGKey(0))
     video = SyntheticVideo(VideoConfig(h=cfg.img_h, w=cfg.img_w, seed=0))
     img = jnp.asarray(video.frame(0)[0])[None]
     plan = SwinSplitPlan(cfg, params)
-    paper = ActivationCodec(mode="int8_zlib")
-    delta = ActivationCodec(mode="int8_delta_zlib")
 
     rows = []
     input_mb = cfg.img_h * cfg.img_w * 3 / 2 ** 20
@@ -34,33 +73,85 @@ def run(fast: bool = False):
         if opt in (UE_ONLY, SERVER_ONLY):
             continue
         payload, _ = plan.head(img, opt)
-        t0 = time.perf_counter()
-        cp = paper.compress(payload)
-        t_paper = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        cd = delta.compress(payload)
-        t_delta = time.perf_counter() - t0
-        rows.append({
-            "split": opt,
-            "raw_mb": cp.raw_bytes / 2 ** 20,
-            "int8_zlib_mb": cp.compressed_bytes / 2 ** 20,
-            "int8_zlib_reduction": 1 - cp.ratio,
-            "int8_zlib_s": t_paper,
-            "delta_mb": cd.compressed_bytes / 2 ** 20,
-            "delta_reduction": 1 - cd.ratio,
-            "delta_s": t_delta,
-            "x_input": cp.raw_bytes / 2 ** 20 / input_mb,
-        })
-    save("bench_compression", {"input_mb": input_mb, "rows": rows})
-    for r in rows:
-        print(f"  {r['split']}: raw {r['raw_mb']:.1f} MB ({r['x_input']:.0f}x input) "
-              f"-> paper {r['int8_zlib_mb']:.2f} MB (-{100*r['int8_zlib_reduction']:.1f}%) "
-              f"| delta {r['delta_mb']:.2f} MB (-{100*r['delta_reduction']:.1f}%)")
-    mean_red = sum(r["int8_zlib_reduction"] for r in rows) / len(rows)
-    mean_red_d = sum(r["delta_reduction"] for r in rows) / len(rows)
-    return csv_line("fig3_compression", 1e6 * sum(r["int8_zlib_s"] for r in rows) / len(rows),
-                    f"paper_reduction={mean_red:.3f};delta_reduction={mean_red_d:.3f}")
+        row = {"split": opt}
+        for mode in MODES:
+            legacy = ActivationCodec(mode=mode, fused=False)
+            fused = ActivationCodec(mode=mode)
+            # warm both paths (jit compile / zlib dictionaries are not
+            # what we are measuring), then verify interchangeability
+            cl, cf = legacy.compress(payload), fused.compress(payload)
+            out_l, out_f = legacy.decompress(cl), fused.decompress(cf)
+            identical = _bit_identical(out_l, out_f)
+            row.setdefault("raw_mb", cl.raw_bytes / 2 ** 20)
+            row.setdefault("x_input", cl.raw_bytes / 2 ** 20 / input_mb)
+            row[mode] = {
+                "legacy_mb": cl.compressed_bytes / 2 ** 20,
+                "fused_mb": cf.compressed_bytes / 2 ** 20,
+                "reduction": 1 - cf.ratio,
+                "enc_legacy_s": _best_of(lambda: legacy.compress(payload), reps),
+                "enc_fused_s": _best_of(lambda: fused.compress(payload), reps),
+                "dec_legacy_s": _best_of(lambda: legacy.decompress(cl), reps),
+                "dec_fused_s": _best_of(lambda: fused.decompress(cf), reps),
+                "bit_identical": identical,
+            }
+            assert identical, f"{opt}/{mode}: fused and legacy decode diverge"
+        rows.append(row)
+        for mode in MODES:
+            m = row[mode]
+            print(f"  {opt:7s} {mode:16s} raw {row['raw_mb']:6.2f} MB "
+                  f"({row['x_input']:4.1f}x input) -> {m['fused_mb']:5.2f} MB "
+                  f"(-{100 * m['reduction']:4.1f}%) | enc "
+                  f"{1e3 * m['enc_legacy_s']:7.1f} -> {1e3 * m['enc_fused_s']:6.1f} ms "
+                  f"({m['enc_legacy_s'] / m['enc_fused_s']:4.1f}x) | dec "
+                  f"{1e3 * m['dec_legacy_s']:6.1f} -> {1e3 * m['dec_fused_s']:5.1f} ms "
+                  f"({m['dec_legacy_s'] / m['dec_fused_s']:4.1f}x)")
+
+    enc_speedups = [r[m]["enc_legacy_s"] / r[m]["enc_fused_s"]
+                    for r in rows for m in MODES]
+    dec_speedups = [r[m]["dec_legacy_s"] / r[m]["dec_fused_s"]
+                    for r in rows for m in MODES]
+    summary = {
+        "input_mb": input_mb,
+        "fast": fast,
+        "note": ("off-TPU the legacy baseline pays per-leaf interpret-mode "
+                 "dispatch; the ratio bundles launch-count reduction with "
+                 "the per-launch overhead it amortizes (module docstring)"),
+        "rows": rows,
+        "enc_speedup_min": min(enc_speedups),
+        "enc_speedup_max": max(enc_speedups),
+        "dec_speedup_min": min(dec_speedups),
+        "dec_speedup_max": max(dec_speedups),
+        "mean_reduction_int8_zlib": float(np.mean(
+            [r["int8_zlib"]["reduction"] for r in rows])),
+        "mean_reduction_delta": float(np.mean(
+            [r["int8_delta_zlib"]["reduction"] for r in rows])),
+    }
+    save("bench_compression_fast" if fast else "bench_compression", summary)
+    print(f"  fused encode speedup {min(enc_speedups):.1f}x..{max(enc_speedups):.1f}x, "
+          f"decode {min(dec_speedups):.1f}x..{max(dec_speedups):.1f}x "
+          f"(bit-identical decompressed tensors)")
+    # the >=2x bar is the full-size acceptance check; fast mode (tiny
+    # payloads, harness sanity run) only warns so a noisy host can't
+    # knock out the rest of the benchmark registry
+    if fast:
+        if min(enc_speedups) < 2.0:
+            print(f"  WARNING: fast-mode encode speedup "
+                  f"{min(enc_speedups):.2f}x below the 2x full-size bar")
+    else:
+        assert min(enc_speedups) >= 2.0, \
+            "single-launch fused encode must be >= 2x the per-tensor loop"
+    mean_enc_us = 1e6 * np.mean([r[m]["enc_fused_s"] for r in rows for m in MODES])
+    return csv_line(
+        "fig3_compression", mean_enc_us,
+        f"paper_reduction={summary['mean_reduction_int8_zlib']:.3f};"
+        f"delta_reduction={summary['mean_reduction_delta']:.3f};"
+        f"enc_speedup={min(enc_speedups):.1f}x..{max(enc_speedups):.1f}x")
 
 
 if __name__ == "__main__":
-    print(run())
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced model/frame (quick sanity run)")
+    args = ap.parse_args()
+    print(run(fast=args.fast))

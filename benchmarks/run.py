@@ -24,7 +24,9 @@ def main() -> int:
                             bench_estimator, bench_tx_energy)
 
     benches = [
-        ("fig3_compression", bench_compression.run),
+        # fast mode: reduced model, same legacy-vs-fused comparison + the
+        # bit-identity assert (the full-size run is the module's __main__)
+        ("fig3_compression", lambda: bench_compression.run(fast=True)),
         ("fig4_e2e_delay", bench_e2e_delay.run),
         ("fig5_energy_privacy", bench_energy_privacy.run),
         ("fig6_tx_energy", bench_tx_energy.run),

@@ -16,9 +16,12 @@ Two execution regimes, mirroring the single-UE pipeline:
     so fixed-option sweeps scale to hundreds of UEs without Python-loop
     overhead.  (Adaptive mode senses per UE from per-UE rngs so each UE's
     trace is independently reproducible.)
-  * ``execute_model=True``  -- real Swin heads + codec per UE, real batched
-    tail forwards on the edge; time/energy still accounted with the
-    calibrated models.
+  * ``execute_model=True``  -- real Swin heads per UE, real batched tail
+    forwards on the edge; same-option boundary payloads share ONE fused
+    codec launch per slot (``encode_group_stage`` -> ``compress_group``:
+    per-UE blobs stay byte-identical to the per-UE path, only the
+    simulator's wall clock changes); time/energy still accounted with
+    the calibrated models.
 
 What batching buys is the edge's per-invocation dispatch cost
 (``DeviceProfile.launch_overhead_s``): serving B same-option payloads in
@@ -40,7 +43,7 @@ from repro.core.channel import INTERFERENCE_LEVELS, PathModel, dupf_path
 from repro.core.compression import ActivationCodec
 from repro.core.pipeline import (EncodeResult, FrameLog, HeadResult,
                                  UplinkResult, account_stage, decide_stage,
-                                 encode_stage, sense_stage)
+                                 encode_group_stage, encode_stage, sense_stage)
 from repro.core.splitting import SERVER_ONLY, UE_ONLY, SplitPlan, SwinSplitPlan
 
 DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
@@ -303,22 +306,33 @@ class CellSimulator:
         else:
             options = [option] * n
 
-        # --- head + encode (real per UE, or table lookups) -------------------
+        # --- head (real per UE, or table lookups) ----------------------------
         heads: List[HeadResult] = []
-        encs: List[EncodeResult] = []
         for i, opt in enumerate(options):
             if self.execute_model:
                 payload, local = self.plan.head(imgs[i % len(imgs)], opt)
-                head = HeadResult(head_s=self._head_s[opt], payload=payload,
-                                  local_out=local)
-                ctrl = self._controllers[i] if self._controllers else None
-                encs.append(encode_stage(self.plan, self.system, self.codec,
-                                         head.payload, opt, True, ctrl))
+                heads.append(HeadResult(head_s=self._head_s[opt],
+                                        payload=payload, local_out=local))
             else:
-                head = HeadResult(head_s=self._head_s[opt], payload=None,
-                                  local_out=None)
-                encs.append(self._enc[opt])          # per-option cache
-            heads.append(head)
+                heads.append(HeadResult(head_s=self._head_s[opt], payload=None,
+                                        local_out=None))
+
+        # --- encode: same-option payloads share ONE fused codec launch -------
+        encs: List[EncodeResult] = [None] * n          # type: ignore[list-item]
+        if self.execute_model:
+            by_option: Dict[str, List[int]] = {}
+            for i, opt in enumerate(options):
+                by_option.setdefault(opt, []).append(i)
+            for opt, idxs in by_option.items():
+                group = encode_group_stage(
+                    self.plan, self.system, self.codec,
+                    [heads[i].payload for i in idxs], opt, True,
+                    [self._controllers[i] if self._controllers else None
+                     for i in idxs])
+                for i, e in zip(idxs, group):
+                    encs[i] = e
+        else:
+            encs = [self._enc[opt] for opt in options]   # per-option cache
 
         # --- uplink: one vectorized draw over the UE axis --------------------
         comp_b = np.array([e.compressed_bytes for e in encs], float)

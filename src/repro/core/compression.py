@@ -2,7 +2,7 @@
 
 Two stages, exactly as the paper:
   (1) FP32 -> INT8 per-block absmax quantization.  Device-side; runs the
-      Pallas TPU kernel (kernels/quant.py) -- interpret mode on CPU.
+      Pallas TPU kernels (bitwise-identical jnp path off-TPU, ops.py).
   (2) zlib entropy coding of the int8 bytes.  Host-side: entropy coding is
       inherently serial/byte-oriented, TPUs have no entropy-coder unit
       (DESIGN.md §2) -- the paper likewise runs zlib on the UE CPU.
@@ -10,18 +10,61 @@ Two stages, exactly as the paper:
 The codec operates on arbitrary pytrees (the Swin boundary payload is a
 dict of feature maps; LM split payloads carry the residual stream plus any
 SSM/KV state that moves with the split point).
+
+Two encoders produce interchangeable results:
+
+  * the FUSED path (default): every leaf is packed into one flat
+    block-aligned stream and a single Pallas launch (kernels/codec.py)
+    computes scales + int8 quant (+ the mod-256 delta filter: in-register
+    per grid step with ``delta_layout='block'``, or the legacy-equivalent
+    per-leaf spatial delta fused into the same executable as an integer
+    epilogue with the default ``'spatial'``); one device->host transfer
+    and one zlib call cover the whole payload.
+    Jitted encode/decode closures are trace-cached per (mode, quant
+    block); jax.jit keys the per-leaf-shape-signature traces underneath,
+    so nothing retraces per frame.  ``compress_group`` extends the same
+    single launch across many same-mode payloads (the cell's per-slot
+    batch group) while emitting per-payload blobs that are byte-identical
+    to what per-payload ``compress`` would produce.
+  * the LEGACY per-tensor loop (``fused=False``): one quant launch, one
+    transfer and one zlib call per leaf, with the delta filter on the
+    host.  Kept as the compatibility decoder for ``mode=None`` payloads
+    and as the baseline in benchmarks/bench_compression.py.
+
+The paths may lay out delta streams differently (the host image-row
+delta, its fused 'spatial' equivalent, or the kernel's block-local
+'block' variant), but every layout is exactly invertible on the same
+quantized grid, so *decompressed tensors are bit-identical* whichever
+encoder produced the payload (DESIGN.md §5).
 """
 from __future__ import annotations
 
+import functools
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+
+_INT8_MODES = ("int8", "int8_zlib", "int8_delta_zlib")
+
+
+def spatial_delta_axis(shape: Tuple[int, ...]) -> Optional[int]:
+    """The delta filter's axis choice, made ONCE at encode time and recorded
+    in ``TensorMeta.delta_axis`` so encoder and decoder can never disagree:
+    the first spatial axis (skipping a small leading batch dim).  None for
+    tensors the filter does not apply to."""
+    if len(shape) < 3 or int(np.prod(shape)) == 0:
+        return None
+    return 1 if shape[0] < 4 else 0
+
+
+def _delta_stride(shape: Tuple[int, ...], axis: int) -> int:
+    return int(np.prod(shape[axis + 1:])) if len(shape) > axis + 1 else 1
 
 
 @dataclass
@@ -31,6 +74,13 @@ class TensorMeta:
     n: int                    # valid element count (pre-padding)
     n_blocks: int
     block: int
+    # delta filter: the spatial axis chosen at encode time (see
+    # spatial_delta_axis); None = leaf not filtered (or a pre-field legacy
+    # payload -- the legacy decoder falls back to the historical heuristic).
+    delta_axis: Optional[int] = None
+    # fused stream: index of this leaf's first quant block in the packed
+    # stream (segment offset = block_start * block elements/bytes).
+    block_start: int = 0
 
 
 @dataclass
@@ -39,13 +89,21 @@ class CompressedPayload:
 
     ``mode`` records the codec mode the payload was produced with, so the
     receiver decodes it correctly even if its own codec was constructed
-    with a different default (None = legacy payload, decoder's mode wins)."""
-    blobs: List[bytes]                 # zlib(int8 blocks), one per tensor
+    with a different default (None = legacy payload, decoder's mode wins).
+    ``fused`` marks the single-stream layout: ``blobs``/``scales`` hold
+    ONE entry covering every leaf, and ``meta[i].block_start`` locates
+    leaf i's segment inside the stream.  ``delta_layout`` records which
+    delta geometry a fused delta stream was written with ('spatial' |
+    'block'), so any receiver inverts it correctly."""
+    blobs: List[bytes]                 # zlib(int8 blocks); one per tensor,
+                                       # or a single packed stream (fused)
     scales: List[np.ndarray]           # f32 per-block scales (shipped raw)
     meta: List[TensorMeta]
     raw_bytes: int                     # payload size before compression
     treedef: Any = None
     mode: Optional[str] = None
+    fused: bool = False
+    delta_layout: Optional[str] = None
 
     @property
     def compressed_bytes(self) -> int:
@@ -57,6 +115,126 @@ class CompressedPayload:
         return self.compressed_bytes / max(self.raw_bytes, 1)
 
 
+# ---------------------------------------------------------------------------
+# fused-path trace cache
+# ---------------------------------------------------------------------------
+#
+# One jitted closure per (quant block, delta layout) for encode and per
+# (segment layout, quant block, delta layout) for decode.  jax.jit's own
+# cache keys the traces on the leaf-shape signature, so a frame with
+# payload shapes seen before costs zero retracing.
+#
+# Two delta layouts, both single-launch:
+#   'spatial' (default): the quant kernel emits the int8 grid and a fused
+#       integer epilogue (same jitted executable) applies the legacy-
+#       equivalent per-leaf spatial delta -- stride = one row along the
+#       recorded delta_axis -- before the stream leaves the device.  Best
+#       compression (feature maps are spatially smooth).
+#   'block': the kernel's fully in-register variant -- the delta runs per
+#       grid step inside the Pallas kernel (stride = one 128-lane sublane
+#       row, block-local).  Zero epilogue, but the fixed stride tracks
+#       spatial smoothness less well; see results/bench_compression.json.
+
+def _spatial_delta_apply(q_seg, shape, n):
+    """int8 (nbs*block,) segment -> uint8 mod-256 delta'd segment."""
+    axis = spatial_delta_axis(shape)
+    if axis is None:
+        return q_seg.astype(jnp.uint8)          # wraps mod 256 (bit view)
+    R = _delta_stride(shape, axis)
+    qi = q_seg[:n].astype(jnp.int32)
+    prev = jnp.concatenate([jnp.zeros((R,), jnp.int32), qi[:-R]]) \
+        if R < n else jnp.zeros((n,), jnp.int32)
+    d = ((qi - prev) % 256).astype(jnp.uint8)
+    return jnp.concatenate([d, q_seg[n:].astype(jnp.uint8)])
+
+
+def _spatial_delta_invert(d_seg, shape, n, delta_axis):
+    """uint8 segment -> int8 quantized grid (inverse of the above)."""
+    if delta_axis is None:
+        return d_seg.astype(jnp.int8)
+    R = _delta_stride(shape, delta_axis)
+    chains = d_seg[:n].astype(jnp.int32).reshape(n // R, R)
+    acc = jnp.cumsum(chains, axis=0) % 256
+    q = (acc - jnp.where(acc > 127, 256, 0)).astype(jnp.int8).reshape(-1)
+    return jnp.concatenate([q, d_seg[n:].astype(jnp.int8)])
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_encode_fn(block: int, delta: bool, layout: str):
+    @jax.jit
+    def encode(leaves):
+        segs, spans = [], []
+        for x in leaves:
+            flat = jnp.asarray(x).astype(jnp.float32).reshape(-1)
+            pad = (-flat.shape[0]) % block
+            if pad:
+                flat = jnp.pad(flat, (0, pad))
+            segs.append(flat)
+            spans.append(flat.shape[0])
+        total = sum(spans)
+        if total == 0:
+            return (jnp.zeros((0,), jnp.uint8 if delta else jnp.int8),
+                    jnp.zeros((0,), jnp.float32))
+        flat = segs[0] if len(segs) == 1 else jnp.concatenate(segs)
+        if not delta or layout == "block":
+            return ops.codec_encode(flat, block=block, delta=delta)
+        q, scales = ops.codec_encode(flat, block=block, delta=False)
+        outs, off = [], 0
+        for x, span in zip(leaves, spans):
+            outs.append(_spatial_delta_apply(
+                jax.lax.slice(q, (off,), (off + span,)),
+                tuple(x.shape), int(x.size)))
+            off += span
+        return jnp.concatenate(outs), scales
+    return encode
+
+
+# bounded: adaptive cell runs produce a new segment layout whenever a
+# slot's batch-group composition changes, and each layout needs its own
+# trace anyway -- the cap just stops closure/executable accumulation over
+# very long heterogeneous runs (steady-state groups stay cached)
+@functools.lru_cache(maxsize=256)
+def _fused_decode_fn(segments, block: int, delta: bool, layout: str):
+    """segments: per-leaf (shape, dtype, n, block_start, delta_axis)."""
+    @jax.jit
+    def decode(stream, scales):
+        if scales.shape[0] == 0:
+            flat = jnp.zeros((0,), jnp.float32)
+        elif delta and layout != "block":
+            qsegs = []
+            for shape, _, n, start, axis in segments:
+                span = block * (-(-n // block) if n else 0)
+                qsegs.append(_spatial_delta_invert(
+                    jax.lax.slice(stream, (start * block,),
+                                  (start * block + span,)), shape, n, axis))
+            q = jnp.concatenate(qsegs)
+            flat = ops.codec_decode(q, scales, block=block, delta=False)
+        else:
+            flat = ops.codec_decode(stream, scales, block=block, delta=delta)
+        leaves = []
+        for shape, dtype, n, start, _ in segments:
+            seg = jax.lax.slice(flat, (start * block,), (start * block + n,))
+            leaves.append(seg.reshape(shape).astype(jnp.dtype(dtype)))
+        return leaves
+    return decode
+
+
+def _segment_metas(leaves, block: int,
+                   record_delta: bool) -> Tuple[List[TensorMeta], int, int]:
+    """Per-leaf stream bookkeeping.  Returns (metas, raw_bytes, n_blocks)."""
+    metas, raw, start = [], 0, 0
+    for x in leaves:
+        nb = -(-x.size // block) if x.size else 0
+        metas.append(TensorMeta(
+            tuple(x.shape), str(x.dtype), int(x.size), nb, block,
+            delta_axis=(spatial_delta_axis(tuple(x.shape))
+                        if record_delta else None),
+            block_start=start))
+        raw += x.size * x.dtype.itemsize
+        start += nb
+    return metas, raw, start
+
+
 @dataclass
 class ActivationCodec:
     """INT8+zlib codec with payload accounting.
@@ -65,18 +243,58 @@ class ActivationCodec:
     level: zlib level (1 = paper's 'rapid' setting).
     mode: 'int8_zlib' (paper) | 'int8' (quant only) | 'zlib' (no quant)
           | 'raw' (accounting only)
-          | 'int8_delta_zlib' (beyond-paper: PNG-style delta filter along
-            the leading spatial axis before zlib -- feature maps are
-            spatially smooth, so the filtered int8 stream is far more
-            compressible: 88.4% vs 78.6% reduction on Swin split-1
-            activations; EXPERIMENTS.md §Perf-codec).
+          | 'int8_delta_zlib' (beyond-paper: lossless mod-256 delta filter
+            on the quantized grid before zlib -- feature maps are smooth,
+            so the filtered int8 stream is far more compressible: 88.4%
+            vs 78.6% reduction on Swin split-1 activations; DESIGN.md §5
+            and results/bench_compression.json).
+    fused: encode int8-family payloads with the single-launch fused
+           kernel path (default).  ``fused=False`` keeps the legacy
+           per-tensor loop; decode always honors the payload's own
+           layout, so either side may flip the flag independently.
+    delta_layout: fused delta geometry -- 'spatial' (legacy-equivalent
+           per-leaf row delta fused into the encode executable; best
+           ratio) or 'block' (fully in-register per grid step inside the
+           Pallas kernel; zero epilogue, slightly worse ratio).
     """
     quant_block: int = 8192
     level: int = 1
     mode: str = "int8_zlib"
+    fused: bool = True
+    delta_layout: str = "spatial"
+
+    def _use_fused(self) -> bool:
+        if self.mode in _INT8_MODES and self.quant_block % 128:
+            # both encoders tile the stream into 128-lane rows (the legacy
+            # kernel asserts the same thing deeper down, less readably)
+            raise ValueError(f"quant_block must be a multiple of 128 (TPU "
+                             f"lane width); got {self.quant_block}")
+        return self.fused and self.mode in _INT8_MODES
 
     # -- compress -----------------------------------------------------------
     def compress(self, tree) -> CompressedPayload:
+        if self._use_fused():
+            return self._compress_fused(tree)
+        return self._compress_legacy(tree)
+
+    def _compress_fused(self, tree) -> CompressedPayload:
+        leaves, treedef = jax.tree.flatten(tree)
+        leaves = [jnp.asarray(x) for x in leaves]
+        delta = self.mode == "int8_delta_zlib"
+        stream, scales = _fused_encode_fn(
+            self.quant_block, delta, self.delta_layout)(tuple(leaves))
+        stream, scales = jax.device_get((stream, scales))   # one transfer
+        metas, raw, _ = _segment_metas(
+            leaves, self.quant_block,
+            record_delta=delta and self.delta_layout == "spatial")
+        buf = stream.tobytes()
+        blob = buf if self.mode == "int8" else zlib.compress(buf, self.level)
+        return CompressedPayload([blob], [scales], metas, raw, treedef,
+                                 mode=self.mode, fused=True,
+                                 delta_layout=self.delta_layout if delta
+                                 else None)
+
+    def _compress_legacy(self, tree) -> CompressedPayload:
         leaves, treedef = jax.tree.flatten(tree)
         blobs, scales, metas = [], [], []
         raw = 0
@@ -95,16 +313,17 @@ class ActivationCodec:
                 continue
             q, s, n = ops.quantize(x, block=self.quant_block)
             q_np = np.asarray(q)
+            delta_axis = (spatial_delta_axis(tuple(x.shape))
+                          if self.mode == "int8_delta_zlib" else None)
             if self.mode == "int8":
                 payload = q_np.tobytes()
-            elif self.mode == "int8_delta_zlib" and x.ndim >= 3:
+            elif delta_axis is not None:
                 img = q_np.reshape(-1)[:x.size].reshape(x.shape)
-                axis = 1 if x.shape[0] < 4 else 0     # first spatial axis
                 # exact mod-256 delta (d[0] = x[0], so reconstruction is
                 # a cumsum mod 256 -- lossless)
-                d16 = np.diff(img.astype(np.int16), axis=axis,
+                d16 = np.diff(img.astype(np.int16), axis=delta_axis,
                               prepend=np.zeros_like(
-                                  np.take(img, [0], axis=axis), np.int16))
+                                  np.take(img, [0], axis=delta_axis), np.int16))
                 d = (d16 % 256).astype(np.uint8)
                 tail = q_np.reshape(-1)[x.size:]      # block padding
                 payload = zlib.compress(d.tobytes() + tail.tobytes(), self.level)
@@ -113,12 +332,102 @@ class ActivationCodec:
             blobs.append(payload)
             scales.append(np.asarray(s))
             metas.append(TensorMeta(tuple(x.shape), str(x.dtype), int(n),
-                                    int(q.shape[0]), int(q.shape[1])))
+                                    int(q.shape[0]), int(q.shape[1]),
+                                    delta_axis=delta_axis))
         return CompressedPayload(blobs, scales, metas, raw, treedef,
                                  mode=self.mode)
 
+    # -- batch-group compress (one launch across many payloads) -------------
+    def compress_group(self, trees: Sequence[Any]) -> List[CompressedPayload]:
+        """Encode many payloads in ONE device pass.
+
+        The packed stream keeps every leaf's own quant blocks, and each
+        payload's byte range is zlib'd separately, so the returned
+        payloads are byte-identical to per-payload ``compress`` -- the
+        per-UE uplink accounting (and the receiver) can't tell the
+        difference; only the encoder's wall clock can."""
+        if not trees or len(trees) == 1 or not self._use_fused():
+            return [self.compress(t) for t in trees]
+        delta = self.mode == "int8_delta_zlib"
+        flat: List[Any] = []
+        per_tree = []
+        for t in trees:
+            leaves, treedef = jax.tree.flatten(t)
+            leaves = [jnp.asarray(x) for x in leaves]
+            per_tree.append((leaves, treedef))
+            flat.extend(leaves)
+        stream, scales = _fused_encode_fn(
+            self.quant_block, delta, self.delta_layout)(tuple(flat))
+        stream, scales = jax.device_get((stream, scales))
+        out, start = [], 0
+        for leaves, treedef in per_tree:
+            metas, raw, nb = _segment_metas(
+                leaves, self.quant_block,
+                record_delta=delta and self.delta_layout == "spatial")
+            buf = stream[start * self.quant_block:
+                         (start + nb) * self.quant_block].tobytes()
+            blob = (buf if self.mode == "int8"
+                    else zlib.compress(buf, self.level))
+            out.append(CompressedPayload(
+                [blob], [scales[start:start + nb].copy()], metas, raw,
+                treedef, mode=self.mode, fused=True,
+                delta_layout=self.delta_layout if delta else None))
+            start += nb
+        return out
+
     # -- decompress ----------------------------------------------------------
     def decompress(self, p: CompressedPayload):
+        if p.fused:
+            return self._decompress_fused(p)
+        return self._decompress_legacy(p)
+
+    def _fused_stream(self, p: CompressedPayload) -> np.ndarray:
+        delta = p.mode == "int8_delta_zlib"
+        raw = p.blobs[0] if p.mode == "int8" else zlib.decompress(p.blobs[0])
+        return np.frombuffer(raw, dtype=np.uint8 if delta else np.int8)
+
+    def _decompress_fused(self, p: CompressedPayload):
+        delta = p.mode == "int8_delta_zlib"
+        block = p.meta[0].block if p.meta else self.quant_block
+        segments = tuple((m.shape, m.dtype, m.n, m.block_start, m.delta_axis)
+                         for m in p.meta)
+        leaves = _fused_decode_fn(segments, block, delta,
+                                  p.delta_layout or "block")(
+            jnp.asarray(self._fused_stream(p)), jnp.asarray(p.scales[0]))
+        return jax.tree.unflatten(p.treedef, leaves)
+
+    def decompress_group(self, ps: Sequence[CompressedPayload]) -> List[Any]:
+        """Decode many fused payloads with one upload + one launch (the
+        edge side of ``compress_group``).  The decoded leaves stay device-
+        resident, ready to feed ``SplitPlan.tail_batched`` directly."""
+        if len(ps) <= 1 or not all(p.fused for p in ps):
+            return [self.decompress(p) for p in ps]
+        kinds = {(p.mode, p.delta_layout) for p in ps} \
+            | {("block", m.block) for p in ps for m in p.meta}
+        if len(kinds) > 2:      # one (mode, layout) + one ("block", size)
+            raise ValueError(f"group mixes codec settings: {sorted(kinds)}; "
+                             "decompress_group needs one mode/layout/block")
+        delta = ps[0].mode == "int8_delta_zlib"
+        block = next((m.block for p in ps for m in p.meta), self.quant_block)
+        segments, start = [], 0
+        for p in ps:
+            for m in p.meta:
+                segments.append((m.shape, m.dtype, m.n,
+                                 start + m.block_start, m.delta_axis))
+            start += sum(m.n_blocks for m in p.meta)
+        stream = np.concatenate([self._fused_stream(p) for p in ps])
+        scales = np.concatenate([p.scales[0] for p in ps])
+        leaves = _fused_decode_fn(tuple(segments), block, delta,
+                                  ps[0].delta_layout or "block")(
+            jnp.asarray(stream), jnp.asarray(scales))
+        out, off = [], 0
+        for p in ps:
+            out.append(jax.tree.unflatten(p.treedef,
+                                          leaves[off:off + len(p.meta)]))
+            off += len(p.meta)
+        return out
+
+    def _decompress_legacy(self, p: CompressedPayload):
         # the payload is self-describing: honor the mode it was encoded
         # with, not whatever this codec instance happens to default to
         mode = p.mode if p.mode is not None else self.mode
@@ -136,7 +445,8 @@ class ActivationCodec:
             if mode == "int8_delta_zlib" and len(m.shape) >= 3:
                 n_valid = int(np.prod(m.shape))
                 d = np.frombuffer(raw[:n_valid], dtype=np.uint8).reshape(m.shape)
-                axis = 1 if m.shape[0] < 4 else 0
+                axis = (m.delta_axis if m.delta_axis is not None
+                        else (1 if m.shape[0] < 4 else 0))
                 img = (np.cumsum(d.astype(np.int64), axis=axis) % 256
                        ).astype(np.uint8).view(np.int8)
                 tail = np.frombuffer(raw[n_valid:], dtype=np.int8)
@@ -148,18 +458,33 @@ class ActivationCodec:
         return jax.tree.unflatten(p.treedef, leaves)
 
     # -- accounting-only (no host roundtrip; used by the controller) ---------
+    #
+    # Default entropy-coding ratios per mode when no measured feedback is
+    # available yet: 0.55 on the int8 stream is the paper's rapid-zlib
+    # operating point; the delta filter's measured cold-start ratio on
+    # Swin split payloads is ~0.47 of the int8 stream (an 88% reduction
+    # of raw f32: (1-0.88)*4 bytes/elem ~= 0.47 int8 bytes/elem --
+    # results/bench_compression.json); raw f32 barely compresses (~0.9).
+    DEFAULT_RATIOS = {"int8_zlib": 0.55, "int8_delta_zlib": 0.47, "zlib": 0.90}
+
     def estimate_bytes(self, shapes_dtypes, measured_ratio: Optional[float] = None):
         """Predict compressed payload size from tensor specs.
 
-        measured_ratio: zlib ratio observed on recent frames (the controller
-        feeds back actual ratios); default uses the paper's ~0.55 on int8.
-        """
+        measured_ratio: zlib ratio observed on recent frames (the
+        controller feeds back actual ratios).  It applies to the int8
+        stream for the int8* modes and to the raw float bytes for
+        'zlib'; defaults are mode-aware (DEFAULT_RATIOS)."""
         raw = sum(int(np.prod(s)) * np.dtype(d).itemsize for s, d in shapes_dtypes)
         if self.mode == "raw":
             return raw
+        if self.mode == "zlib":
+            r = (measured_ratio if measured_ratio is not None
+                 else self.DEFAULT_RATIOS["zlib"])
+            return int(raw * r)
         n_elems = sum(int(np.prod(s)) for s, _ in shapes_dtypes)
         int8 = n_elems + 4 * (n_elems // self.quant_block + len(shapes_dtypes))
         if self.mode == "int8":
             return int8
-        r = measured_ratio if measured_ratio is not None else 0.55
+        r = (measured_ratio if measured_ratio is not None
+             else self.DEFAULT_RATIOS[self.mode])
         return int(int8 * r)

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -136,6 +136,44 @@ def encode_stage(plan: SplitPlan, system: Calibrated, codec: ActivationCodec,
                             payload)
     raw, comp = system.payload_bytes(plan, option, codec)
     return EncodeResult(0.010, raw, comp, payload)
+
+
+def encode_group_stage(plan: SplitPlan, system: Calibrated,
+                       codec: ActivationCodec, payloads: Sequence[Any],
+                       option: str, execute_model: bool,
+                       controllers: Sequence[Optional[AdaptiveController]]
+                       ) -> List[EncodeResult]:
+    """Encode many same-option boundary payloads in ONE fused device pass.
+
+    The cell's per-slot entry: ``codec.compress_group`` packs every UE's
+    leaves into a single launch/transfer and still emits per-UE blobs
+    byte-identical to per-UE ``compress`` (the uplink accounting and the
+    receiver see exactly the per-UE path), then ``decompress_group``
+    rebuilds all server views with one launch, device-resident for
+    ``tail_batched``.  Per-UE ``quant_s`` is the group's encode wall time
+    divided by the group size: encode cost is ~linear in payload bytes
+    (kernel + per-UE zlib slice), so total/B estimates the time ONE UE's
+    own device would spend on its own payload -- the quantity the energy
+    and delay models charge.  (The same holds for the serial fallback,
+    where total/B is exactly the mean per-payload time.)  Falls back to
+    per-payload ``encode_stage`` for the degenerate options and
+    accounting-only mode."""
+    if not execute_model or option in (UE_ONLY, SERVER_ONLY):
+        return [encode_stage(plan, system, codec, p, option, execute_model, c)
+                for p, c in zip(payloads, controllers)]
+    # quant_s covers encode only, matching per-UE encode_stage (which stops
+    # its clock before the server-side decompress)
+    t0 = time.perf_counter()
+    comps = codec.compress_group(payloads)
+    quant_s = (time.perf_counter() - t0) / max(len(payloads), 1)
+    views = codec.decompress_group(comps)
+    out = []
+    for comp, view, ctrl in zip(comps, views, controllers):
+        if ctrl is not None:
+            ctrl.observe_ratio(comp.compressed_bytes, comp.raw_bytes)
+        out.append(EncodeResult(quant_s, comp.raw_bytes,
+                                comp.compressed_bytes, view))
+    return out
 
 
 def uplink_stage(system: Calibrated, path: PathModel, compressed_bytes: int,

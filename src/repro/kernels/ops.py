@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import codec as _codec
 from repro.kernels import quant as _quant
 from repro.kernels import flash_attention as _fa
 from repro.kernels import decode_attention as _da
@@ -37,6 +38,36 @@ def quantize(x, block: int = 8192):
 def dequantize(q, scales, n, shape, dtype=jnp.float32):
     return _quant.dequant_pallas(q, scales, n, shape, dtype,
                                  interpret=_interpret())
+
+
+# -- fused activation codec ---------------------------------------------------
+#
+# Unlike the ops above, the codec pair does NOT fall back to interpret mode
+# off-TPU: the interpreter emulates the grid step-by-step (~100x slower than
+# native XLA on CPU, measured in benchmarks/bench_compression.py), which
+# would bury the single-launch win the codec exists for.  Every codec op is
+# bitwise order-independent (absmax, round, clip, integer cumsum), so the
+# pure-jnp path produces streams bit-identical to the kernel's; tests still
+# validate the Pallas pair against ref.py via interpret=True directly.
+
+def codec_encode(flat, block: int = 8192, delta: bool = False):
+    """Single-launch payload encode: per-block absmax scales + int8 quant
+    (+ block-local mod-256 row delta) over a packed block-aligned stream.
+    Returns (stream (total,) uint8|int8, scales (nb,))."""
+    if on_tpu():
+        return _codec.codec_encode_pallas(flat, block=block, delta=delta,
+                                          interpret=False)
+    from repro.kernels import ref as _ref
+    return _ref.codec_encode_ref(flat, block, delta)
+
+
+def codec_decode(stream, scales, block: int = 8192, delta: bool = False):
+    """Inverse of codec_encode; returns the dequantized (total,) f32 stream."""
+    if on_tpu():
+        return _codec.codec_decode_pallas(stream, scales, block=block,
+                                          delta=delta, interpret=False)
+    from repro.kernels import ref as _ref
+    return _ref.codec_decode_ref(stream, scales, block, delta)
 
 
 # -- attention ----------------------------------------------------------------

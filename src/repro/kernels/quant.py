@@ -16,9 +16,17 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 INT8_MAX = 127.0
+# Explicit reciprocal multiply for the scale: XLA rewrites the constant
+# division ``absmax / 127`` into this multiply under jit but not in eager
+# dispatch (a 1-ulp wobble between execution regimes).  Writing the multiply
+# out keeps scales bitwise identical across eager / jit / interpret, which
+# is what lets the fused codec (kernels/codec.py) and this per-tensor
+# kernel produce interchangeable quantized grids.
+INV_INT8_MAX = float(np.float32(1.0) / np.float32(INT8_MAX))
 LANES = 128
 BLOCK_ROWS = 64          # (64, 128) fp32 tile = 32 KiB VMEM per buffer
 
@@ -26,7 +34,7 @@ BLOCK_ROWS = 64          # (64, 128) fp32 tile = 32 KiB VMEM per buffer
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)                  # (BLOCK_ROWS, LANES)
     absmax = jnp.max(jnp.abs(x))
-    scale = jnp.where(absmax > 0, absmax / INT8_MAX, 1.0)
+    scale = jnp.where(absmax > 0, absmax * INV_INT8_MAX, 1.0)
     q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX)
     q_ref[...] = q.astype(jnp.int8)
     s_ref[0] = scale
@@ -46,6 +54,9 @@ def quant_pallas(x, *, block: int = BLOCK_ROWS * LANES, interpret: bool = True):
     if pad:
         flat = jnp.pad(flat, (0, pad))
     nb = flat.shape[0] // block
+    if nb == 0:                              # empty leaf: nothing to launch
+        return (jnp.zeros((0, block), jnp.int8),
+                jnp.zeros((0,), jnp.float32), n)
     xb = flat.reshape(nb * rows, LANES)
 
     q, s = pl.pallas_call(
@@ -68,6 +79,8 @@ def quant_pallas(x, *, block: int = BLOCK_ROWS * LANES, interpret: bool = True):
 def dequant_pallas(q, s, n, shape, dtype=jnp.float32, *, interpret: bool = True):
     """Inverse of quant_pallas."""
     nb, block = q.shape
+    if nb == 0:
+        return jnp.zeros(shape, dtype)
     rows = block // LANES
     qb = q.reshape(nb * rows, LANES)
     o = pl.pallas_call(

@@ -6,8 +6,12 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 INT8_MAX = 127.0
+# explicit reciprocal multiply, matching the kernels (see kernels/quant.py:
+# keeps scales bitwise identical across eager/jit/interpret)
+INV_INT8_MAX = float(np.float32(1.0) / np.float32(INT8_MAX))
 
 
 # -- quant ------------------------------------------------------------------
@@ -24,7 +28,7 @@ def quant_ref(x, block: int = 1024):
         flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(-1, block)
     absmax = jnp.max(jnp.abs(blocks), axis=1)
-    scale = jnp.where(absmax > 0, absmax / INT8_MAX, 1.0)
+    scale = jnp.where(absmax > 0, absmax * INV_INT8_MAX, 1.0)
     q = jnp.clip(jnp.round(blocks / scale[:, None]), -INT8_MAX, INT8_MAX)
     return q.astype(jnp.int8), scale, n
 
@@ -32,6 +36,31 @@ def quant_ref(x, block: int = 1024):
 def dequant_ref(q, scale, n, shape, dtype=jnp.float32):
     x = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
     return x.reshape(shape).astype(dtype)
+
+
+# -- fused codec (quant [+ block-local row delta] over a packed stream) -------
+
+def codec_encode_ref(flat, block: int, delta: bool):
+    """flat: (total,) f32, total % block == 0.  Returns (stream, scales)."""
+    q, scale, _ = quant_ref(flat, block=block)          # (nb, block) int8
+    if not delta:
+        return q.reshape(-1), scale
+    rows = block // 128
+    qi = q.reshape(-1, rows, 128).astype(jnp.int32)
+    prev = jnp.pad(qi[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    return ((qi - prev) % 256).astype(jnp.uint8).reshape(-1), scale
+
+
+def codec_decode_ref(stream, scales, block: int, delta: bool):
+    rows = block // 128
+    if delta:
+        d = stream.reshape(-1, rows, 128).astype(jnp.int32)
+        acc = jnp.cumsum(d, axis=1) % 256
+        q = acc - jnp.where(acc > 127, 256, 0)
+    else:
+        q = stream.reshape(-1, rows, 128).astype(jnp.int32)
+    return (q.astype(jnp.float32)
+            * scales[:, None, None].astype(jnp.float32)).reshape(-1)
 
 
 # -- flash attention (causal GQA) --------------------------------------------

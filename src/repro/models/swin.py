@@ -276,7 +276,8 @@ def head_apply(cfg: SwinConfig, params, img, split: int, *,
     ship_merged=False is the beyond-paper payload optimization: the merged
     tensor is NOT shipped; the server recomputes the (cheap) patch-merge
     from the last stage output, cutting the deepest boundary tensor from
-    the payload (see EXPERIMENTS.md §Perf).
+    the payload (payload sizes per split: benchmarks/bench_compression.py
+    -> results/bench_compression.json).
     """
     x = patch_embed(cfg, params["patch_embed"], img)
     feats: List[jnp.ndarray] = []

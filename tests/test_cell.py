@@ -230,6 +230,45 @@ def test_vectorized_observe_kpms(system):
     assert (kpm.prb_util >= 0).all() and (kpm.prb_util <= 1).all()
 
 
+# -- batched cell-side codec ---------------------------------------------------
+
+def test_cell_group_encode_bit_identical_to_per_ue(swin_exec):
+    """The cell's one-launch group encode (encode_group_stage ->
+    compress_group) must produce per-UE payloads byte-identical to the
+    per-UE path, and decode to bit-identical server views."""
+    cfg, plan, imgs = swin_exec
+    for mode in ("int8_zlib", "int8_delta_zlib"):
+        codec = ActivationCodec(mode=mode)
+        payloads = [plan.head(im, "split1")[0] for im in imgs]
+        group = codec.compress_group(payloads)
+        solo = [codec.compress(p) for p in payloads]
+        for g, s in zip(group, solo):
+            assert g.blobs[0] == s.blobs[0]
+            np.testing.assert_array_equal(g.scales[0], s.scales[0])
+            assert g.compressed_bytes == s.compressed_bytes
+        views = codec.decompress_group(group)
+        for vg, s in zip(views, solo):
+            vs = codec.decompress(s)
+            for lg, ls in zip(jax.tree.leaves(vg), jax.tree.leaves(vs)):
+                np.testing.assert_array_equal(np.asarray(lg), np.asarray(ls))
+
+
+def test_encode_group_stage_accounts_per_ue(system, swin_exec):
+    """Group encode shares the launch but keeps per-UE byte accounting
+    (each UE's uplink is charged for its own blob)."""
+    from repro.core.pipeline import encode_group_stage, encode_stage
+    cfg, plan, imgs = swin_exec
+    payloads = [plan.head(im, "split1")[0] for im in imgs]
+    codec = ActivationCodec()
+    encs = encode_group_stage(plan, system, codec, payloads, "split1", True,
+                              [None] * len(payloads))
+    for e, p in zip(encs, payloads):
+        solo = encode_stage(plan, system, codec, p, "split1", True)
+        assert e.compressed_bytes == solo.compressed_bytes
+        assert e.raw_bytes == solo.raw_bytes
+        assert e.quant_s > 0
+
+
 # -- self-describing codec payload -------------------------------------------
 
 def test_payload_records_codec_mode():

@@ -101,3 +101,9 @@ def test_estimate_bytes_tracks_measured():
                                measured_ratio=p.compressed_bytes
                                / (x.size + 4 * (x.size // codec.quant_block + 1)))
     assert abs(est - p.compressed_bytes) / p.compressed_bytes < 0.05
+
+
+# NOTE: the fused single-launch codec path has its own (hypothesis-free)
+# module, tests/test_codec_fused.py -- this module stays gated on the
+# optional property-testing dep.
+
