@@ -21,7 +21,7 @@ def main() -> int:
     from benchmarks import (bench_adaptive, bench_cell, bench_compression,
                             bench_dupf, bench_e2e_delay,
                             bench_energy_breakdown, bench_energy_privacy,
-                            bench_estimator, bench_tx_energy)
+                            bench_estimator, bench_ran, bench_tx_energy)
 
     benches = [
         # fast mode: reduced model, same legacy-vs-fused comparison + the
@@ -35,6 +35,9 @@ def main() -> int:
         ("estimator_ablation", bench_estimator.run),
         ("adaptive_vs_fixed", bench_adaptive.run),
         ("cell_batching", bench_cell.run),
+        # fast mode: smaller load sweep + coarser TTI, same acceptance
+        # anchors (idle-cell calibration, load degradation, EDF vs RR)
+        ("ran_scheduler", lambda: bench_ran.run(fast=True)),
     ]
     if args.only:
         benches = [(n, f) for n, f in benches if args.only in n]

@@ -6,7 +6,14 @@ Every frame REALLY executes for every UE: Swin head on each "UE", INT8+zlib
 codec on the boundary, simulated 5G uplink, then the edge server stacks
 same-split payloads and runs ONE jitted tail per batch (core/cell.py).
 
-    PYTHONPATH=src python examples/cell_video.py [--ues 6] [--frames 12]
+``--policy`` switches the radio from independent per-UE links to the
+shared-air-interface MAC (core/ran.py): all uplinks contend for one PRB
+grid, scheduled per TTI by round-robin (rr), proportional-fair (pf), or
+deadline-aware EDF (edf), with HARQ retransmissions -- the per-UE table
+then also shows PRB share, HARQ count, and deadline misses.
+
+    PYTHONPATH=src python examples/cell_video.py [--ues 6] [--frames 12] \
+        [--policy edf] [--budget 2.5]
 """
 import argparse
 
@@ -19,6 +26,7 @@ from repro.core import ActivationCodec, SwinSplitPlan, calibrate
 from repro.core.adaptive import Objective
 from repro.core.cell import CellSimulator, cell_interference_traces
 from repro.core.pipeline import build_controller
+from repro.core.ran import POLICIES, RanCell, RanConfig, make_policy
 from repro.data.video import SyntheticVideo, VideoConfig
 from repro.models import swin as SW
 
@@ -30,6 +38,12 @@ def main():
     ap.add_argument("--no-batching", action="store_true")
     ap.add_argument("--fixed", default=None,
                     help="fixed split option instead of adaptive (e.g. split2)")
+    ap.add_argument("--policy", default=None, choices=sorted(POLICIES),
+                    help="share the air interface through the RAN MAC with "
+                         "this per-TTI scheduler (default: isolated links)")
+    ap.add_argument("--budget", type=float, default=2.5,
+                    help="per-frame E2E deadline in seconds (EDF urgency / "
+                         "deadline-miss accounting; needs --policy)")
     args = ap.parse_args()
 
     cfg = reduced()
@@ -45,24 +59,38 @@ def main():
             system, objective=Objective(w_delay=1.0, w_energy=0.15,
                                         w_privacy=0.05))
 
+    ran = None
+    if args.policy is not None:
+        ran = RanCell(policy=make_policy(args.policy),
+                      cfg=RanConfig(tti_s=0.002))
     cell = CellSimulator(
         plan=SwinSplitPlan(cfg, params), system=system,
         codec=ActivationCodec(), controller=controller,
         n_ues=args.ues, seed=0, execute_model=True,
-        batching=not args.no_batching, max_wait_s=30.0)
+        batching=not args.no_batching, max_wait_s=30.0,
+        ran=ran, frame_budget_s=args.budget)
 
     trace = cell_interference_traces(args.frames, args.ues, seed=1)
     res = cell.run(trace, imgs=imgs, option=args.fixed, keep_outputs=True)
 
+    mac_cols = f" {'prb':>5s} {'harq':>4s} {'miss':>4s}" if ran else ""
     print(f"{'ue':>3s} {'frames':>6s} {'options used':24s} {'delay':>8s} "
-          f"{'queue':>7s} {'batch':>5s}")
+          f"{'queue':>7s} {'batch':>5s}{mac_cols}")
     for u in range(args.ues):
         logs = res.ue_logs(u)
         opts = ",".join(sorted({l.option for l in logs}))
+        mac = ""
+        if ran:
+            # share over frames that actually transmitted (ue_only frames
+            # carry the isolated-link default 1.0 and would inflate it)
+            shares = [l.prb_share for l in logs if l.tx_s > 0]
+            mac = (f" {np.mean(shares) if shares else 0.0:5.2f}"
+                   f" {sum(l.harq_retx for l in logs):4d}"
+                   f" {sum(l.deadline_miss for l in logs):4d}")
         print(f"{u:3d} {len(logs):6d} {opts:24s} "
               f"{np.mean([l.delay_s for l in logs]):7.3f}s "
               f"{np.mean([l.queue_s for l in logs]):6.3f}s "
-              f"{np.mean([l.batch_size for l in logs]):5.1f}")
+              f"{np.mean([l.batch_size for l in logs]):5.1f}{mac}")
 
     st = res.stats
     n_det = sum(lv["cls"].shape[-1] for lv in res.outputs[-1][0]) \
@@ -75,6 +103,10 @@ def main():
           f"busy {st.edge_busy_s:.2f} s total")
     print(f"mean E2E delay over the cell: {res.mean_delay_s:.3f} s "
           f"({n_det}-class detection maps per UE per frame)")
+    if ran:
+        print(f"RAN ({args.policy}): deadline-miss rate "
+              f"{res.deadline_miss_rate:.2f} against a {args.budget:.1f}s "
+              f"frame budget")
 
 
 if __name__ == "__main__":

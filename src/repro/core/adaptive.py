@@ -26,6 +26,13 @@ from repro.core.energy import WH_PER_J
 from repro.core.splitting import SERVER_ONLY, UE_ONLY
 from repro.core.throughput import ThroughputEstimator
 
+# distance-correlation leakage per option (core/privacy.py measurements;
+# split1 matches the paper's 0.527).  Shared by build_controller and the
+# RAN bench/tests so the profile cannot drift between them.
+DEFAULT_PRIVACY_PROFILE = {"ue_only": 0.0, "server_only": 1.0,
+                           "split1": 0.53, "split2": 0.42,
+                           "split3": 0.33, "split4": 0.27}
+
 
 @dataclass
 class Objective:
@@ -66,6 +73,11 @@ class AdaptiveController:
     quant_time_s: float = 0.010      # measured codec cost per frame
     _current: Optional[str] = None
     _ratio: float = 1.0              # measured compressed/raw feedback
+    # EWMA of the realized *scheduled* rate the serving cell granted us
+    # (core/ran.py).  None until the first grant report: an isolated link
+    # (the paper's single-UE testbed) never sets it and selection is
+    # unchanged.
+    _granted_rate: Optional[float] = None
 
     # -- per-UE replication (multi-UE cell) ----------------------------------
     def clone(self) -> "AdaptiveController":
@@ -73,7 +85,8 @@ class AdaptiveController:
         calibrated system, with its own hysteresis/compression-ratio state.
         ``CellSimulator`` spawns one per UE."""
         import dataclasses
-        return dataclasses.replace(self, _current=None, _ratio=1.0)
+        return dataclasses.replace(self, _current=None, _ratio=1.0,
+                                   _granted_rate=None)
 
     def spawn(self, n: int) -> List["AdaptiveController"]:
         return [self.clone() for _ in range(n)]
@@ -82,6 +95,28 @@ class AdaptiveController:
     def observe_ratio(self, compressed: int, raw: int):
         if raw > 0:
             self._ratio = 0.7 * self._ratio + 0.3 * (compressed / raw)
+
+    def observe_grant(self, realized_rate_bps: float):
+        """Feed back the rate the cell's scheduler actually delivered
+        (payload bits over enqueue->delivered, i.e. contention included).
+        The estimator predicts the *isolated link* rate; on a loaded cell
+        the granted rate is what uplink time actually follows."""
+        if realized_rate_bps > 0:
+            self._granted_rate = (realized_rate_bps
+                                  if self._granted_rate is None else
+                                  0.7 * self._granted_rate
+                                  + 0.3 * realized_rate_bps)
+
+    def relax_grant(self, link_rate_bps: float):
+        """Called on frames the UE sent nothing uplink: with no grant to
+        observe, the stale congestion estimate decays toward the idle link
+        rate so the controller eventually probes an offloading option
+        again (otherwise one congestion episode would lock it at ue_only
+        forever).  The slow constant makes probing sparse: a still-loaded
+        cell knocks the estimate right back down on the probe frame."""
+        if self._granted_rate is not None:
+            self._granted_rate = (0.95 * self._granted_rate
+                                  + 0.05 * link_rate_bps)
 
     # -- prediction ------------------------------------------------------------
     def predict(self, option: str, rate_bps: float) -> Prediction:
@@ -121,6 +156,12 @@ class AdaptiveController:
     # -- decision ---------------------------------------------------------------
     def decide(self, kpm: RadioKPM, spec, options: List[str]) -> Prediction:
         rate = self.estimator.predict(kpm, spec)
+        if self._granted_rate is not None:
+            # contention-aware: the scheduled rate can only be <= the link
+            # rate, so the min keeps an idle cell at the estimator's value
+            # while a loaded cell drives selection toward earlier splits /
+            # stronger compression (the paper's behavior under interference)
+            rate = min(rate, self._granted_rate)
         preds = [self.predict(o, rate) for o in options]
         feas = [p for p in preds if p.feasible] or preds
         best = min(feas, key=lambda p: p.cost)

@@ -28,6 +28,18 @@ What batching buys is the edge's per-invocation dispatch cost
 one launch costs ``overhead + B * tail_flops / rate`` instead of
 ``B * (overhead + tail_flops / rate)``.  Cell-level aggregates (edge
 utilization, batch occupancy, queueing delay) come back in ``CellStats``.
+
+Two radio regimes, orthogonal to the execution regimes:
+
+  * ``ran=None`` (default) -- every UE samples the calibrated channel
+    independently (the pre-RAN model: N uplinks never contend).
+  * ``ran=RanCell(...)`` -- all uplinks share ONE PRB grid: per TTI the
+    cell's ``SchedulerPolicy`` grants PRBs over the UEs' byte queues,
+    HARQ re-enqueues failed transport blocks, and each UE's uplink time
+    is the *scheduled* completion (core/ran.py).  Grant history and
+    buffer status feed back into next-frame KPMs and each cloned
+    controller's granted-rate estimate, so split selection becomes
+    contention-aware.
 """
 from __future__ import annotations
 
@@ -41,6 +53,7 @@ from repro.core.adaptive import AdaptiveController, Prediction
 from repro.core.calibration import Calibrated
 from repro.core.channel import INTERFERENCE_LEVELS, PathModel, dupf_path
 from repro.core.compression import ActivationCodec
+from repro.core.ran import GrantReport, RanCell, UplinkRequest
 from repro.core.pipeline import (EncodeResult, FrameLog, HeadResult,
                                  UplinkResult, account_stage, decide_stage,
                                  encode_group_stage, encode_stage, sense_stage)
@@ -211,6 +224,13 @@ class CellResult:
     def mean_delay_s(self) -> float:
         return float(np.mean([l.delay_s for l in self.logs]))
 
+    @property
+    def deadline_miss_rate(self) -> float:
+        """Fraction of frames whose E2E delay exceeded the frame budget
+        (only meaningful on a RAN-scheduled cell, where the budget is
+        logged; legacy logs carry an infinite deadline and never miss)."""
+        return float(np.mean([l.deadline_miss for l in self.logs]))
+
 
 # ---------------------------------------------------------------------------
 # the cell simulator
@@ -238,6 +258,11 @@ class CellSimulator:
     max_wait_s: float = 0.050
     edge_overhead_s: float = 0.008    # per-launch dispatch cost on the edge
     edge_batch_sat: float = 3.0       # batch-throughput saturation k (energy.py)
+    # shared-air-interface MAC (core/ran.py).  None = the legacy regime:
+    # every UE samples the calibrated channel independently (no
+    # contention), bit-compatible with the pre-RAN pipeline numbers.
+    ran: Optional[RanCell] = None
+    frame_budget_s: float = 2.5       # per-frame E2E deadline (EDF urgency)
     stats: CellStats = field(default_factory=CellStats)
 
     def __post_init__(self):
@@ -264,8 +289,15 @@ class CellSimulator:
         ``run`` starts identically -- repeated runs on one simulator are
         reproducible and comparisons stay rng-paired."""
         self._rng = np.random.default_rng(self.seed)          # shared channel
-        seqs = np.random.SeedSequence(self.seed).spawn(self.n_ues)
-        self._ue_rngs = [np.random.default_rng(s) for s in seqs]
+        # children 0..n_ues-1 are the per-UE sensing rngs exactly as before
+        # (spawn keys are index-stable); the extra child feeds HARQ draws so
+        # fading stays aligned across policies (core/ran.py discipline)
+        seqs = np.random.SeedSequence(self.seed).spawn(self.n_ues + 1)
+        self._ue_rngs = [np.random.default_rng(s) for s in seqs[:self.n_ues]]
+        self._harq_rng = np.random.default_rng(seqs[-1])
+        self._last_reports: Dict[int, GrantReport] = {}
+        if self.ran is not None:
+            self.ran.reset(self.n_ues)
         self._controllers = (self.controller.spawn(self.n_ues)
                              if self.controller is not None else None)
         if self._controllers and not isinstance(self.plan, SwinSplitPlan):
@@ -298,8 +330,11 @@ class CellSimulator:
                 "no fixed option and no controller template"
             options = []
             for i in range(n):
-                kpm, spec = sense_stage(levels[i], bool(self.narrowband[i]),
-                                        self._ue_rngs[i])
+                rep = self._last_reports.get(i)
+                kpm, spec = sense_stage(
+                    levels[i], bool(self.narrowband[i]), self._ue_rngs[i],
+                    grant_share=None if rep is None else rep.prb_share,
+                    buffer_bytes=None if rep is None else float(rep.n_bytes))
                 preds[i] = decide_stage(self._controllers[i], kpm, spec,
                                         self.plan.options, levels[i], self.path)
                 options.append(preds[i].option)
@@ -334,16 +369,64 @@ class CellSimulator:
         else:
             encs = [self._enc[opt] for opt in options]   # per-option cache
 
-        # --- uplink: one vectorized draw over the UE axis --------------------
+        # --- grant + uplink --------------------------------------------------
         comp_b = np.array([e.compressed_bytes for e in encs], float)
-        rates = self.system.channel.sample_rate(levels, self._rng,
-                                                narrowband=self.narrowband)
-        tx_s = self.system.channel.tx_time_s(comp_b, rates)
         offload = np.array([o != UE_ONLY for o in options])
-        path_s = np.where(offload,
-                          self.path.sample_latency(self._rng, size=n), 0.0)
         quant_s = np.array([e.quant_s for e in encs])
         head_s = np.array([h.head_s for h in heads])
+        prb_share = np.ones(n)
+        harq_retx = np.zeros(n, int)
+        air_s = None                   # isolated link: airtime == tx time
+        if self.ran is None:
+            # legacy isolated-link regime: one vectorized draw over the UE
+            # axis, tx time = bytes / faded link rate
+            rates = self.system.channel.sample_rate(levels, self._rng,
+                                                    narrowband=self.narrowband)
+            tx_s = self.system.channel.tx_time_s(comp_b, rates)
+        else:
+            # shared cell: the faded link rate is the SAME sample_rate
+            # call (and draw) the legacy branch makes, so the shared rng
+            # stream stays aligned (RAN-vs-legacy and policy-vs-policy
+            # comparisons see identical fading + path jitter); the MAC
+            # then schedules every payload over one PRB grid per TTI
+            link = self.system.channel.sample_rate(
+                levels, self._rng, narrowband=self.narrowband)
+            enq = head_s + quant_s
+            reqs = [UplinkRequest(ue_id=i, n_bytes=int(comp_b[i]),
+                                  enqueue_s=float(enq[i]),
+                                  deadline_s=self.frame_budget_s,
+                                  link_rate_bps=float(link[i]))
+                    for i in range(n) if offload[i] and comp_b[i] > 0]
+            reports = self.ran.serve_slot(reqs, self._harq_rng)
+            rates = np.asarray(link, float).copy()
+            tx_s = np.zeros(n)
+            air_s = np.zeros(n)
+            for i, rep in reports.items():
+                tx_s[i] = rep.tx_s
+                # TX power is charged for granted PRB-seconds (normalized
+                # to the full grid), not the MAC wait: for any policy this
+                # equals payload_bits/link_rate with HARQ retransmission
+                # airtime folded in, matching the isolated-link e_tx for a
+                # lone UE (account_stage)
+                air_s[i] = (rep.granted_prbs * self.ran.cfg.tti_s
+                            / self.ran.cfg.n_prbs)
+                rates[i] = rep.realized_rate_bps   # the *scheduled* rate
+                prb_share[i] = rep.prb_share
+                harq_retx[i] = rep.n_harq_retx
+            self._last_reports = reports
+            if self._controllers is not None:
+                for i, c in enumerate(self._controllers):
+                    if i in reports:
+                        c.observe_grant(reports[i].realized_rate_bps)
+                    else:
+                        # no uplink this frame: the UE cannot see the cell
+                        # load, so its granted-rate estimate relaxes toward
+                        # the idle link rate -- it will eventually probe an
+                        # offloading option again instead of locking at
+                        # ue_only forever after one congestion episode
+                        c.relax_grant(float(link[i]))
+        path_s = np.where(offload,
+                          self.path.sample_latency(self._rng, size=n), 0.0)
         arrival = head_s + quant_s + tx_s + path_s
 
         # --- edge: batched tails ---------------------------------------------
@@ -370,7 +453,11 @@ class CellSimulator:
             logs.append(account_stage(
                 self.system, opt, float(levels[i]), heads[i], encs[i], up,
                 tail_s, queue_s=queue_s, batch_size=batch, ue_id=i,
-                predicted=preds[i]))
+                predicted=preds[i], prb_share=float(prb_share[i]),
+                harq_retx=int(harq_retx[i]),
+                deadline_s=(self.frame_budget_s if self.ran is not None
+                            else float("inf")),
+                air_s=None if air_s is None else float(air_s[i])))
         return logs, outputs
 
     # -- traces ----------------------------------------------------------------

@@ -50,7 +50,19 @@ class ChannelModel:
     min_rate: float = 1e6
 
     def mean_rate(self, interference_db):
+        if not self.rate_table:
+            raise ValueError(
+                "ChannelModel.rate_table is empty: it must map interference "
+                "levels (dB) to calibrated uplink rates (bits/s). Build one "
+                "with repro.core.calibration.calibrate(), or pass e.g. "
+                "ChannelModel(rate_table={-40: 60e6, -5: 11e6}).")
         lv = sorted(self.rate_table)
+        if len(lv) == 1:
+            # one calibration point: a constant-rate channel (np.interp
+            # would silently pin every level to it anyway; be explicit)
+            r = float(self.rate_table[lv[0]])
+            return r if np.ndim(interference_db) == 0 \
+                else np.full(np.shape(interference_db), r)
         log_r = [math.log(self.rate_table[l]) for l in lv]
         # throughput falls roughly geometrically with jamming power:
         # linear interpolation in log-rate, clamped at the table ends
@@ -116,37 +128,52 @@ class RadioKPM:
     prb_util: float
     mcs: float
     bler: float
+    # grant history + buffer status from the serving cell's MAC
+    # (core/ran.py).  Defaults describe an uncontended cell, so the
+    # legacy single-link pipeline is unchanged.
+    prb_grant_share: float = 1.0   # granted/offered PRBs while backlogged
+    buffer_bytes: float = 0.0      # last reported uplink buffer (BSR)
 
 
-def observe_kpms(interference_db, narrowband, rng: np.random.Generator
-                 ) -> RadioKPM:
+def observe_kpms(interference_db, narrowband, rng: np.random.Generator,
+                 grant_share=None, buffer_bytes=None) -> RadioKPM:
     """Scalar inputs give a scalar KPM (byte-identical rng stream to the
     original single-UE path); array inputs give a ``RadioKPM`` whose fields
     are (n_ues,) arrays -- batch sensing for whole-cell analysis.  (The
     adaptive cell decide loop stays per-UE: each UE senses from its own
-    seeded rng so traces are reproducible per UE.)"""
+    seeded rng so traces are reproducible per UE.)
+
+    ``grant_share`` / ``buffer_bytes`` report the serving cell's MAC state
+    (grant history and buffer status, core/ran.py); they consume no rng
+    draws, so passing them keeps the stream byte-identical."""
     # wideband SINR reacts to total interference power; narrowband jammers
     # hit only a few PRBs, so the wideband average underestimates the damage.
     if np.ndim(interference_db) == 0 and np.ndim(narrowband) == 0:
         eff = interference_db if not narrowband else interference_db - 12.0
         sinr = 22.0 + eff * 0.45 + rng.normal(0, 1.0)
-        return RadioKPM(
+        kpm = RadioKPM(
             sinr_db=sinr,
             rsrp_dbm=-78.0 + rng.normal(0, 2.0),
             prb_util=min(1.0, max(0.0, 0.55 + 0.01 * interference_db + rng.normal(0, 0.05))),
             mcs=max(0.0, min(27.0, 18 + 0.3 * eff + rng.normal(0, 1.0))),
             bler=min(1.0, max(0.0, 0.08 - 0.004 * eff + rng.normal(0, 0.02))),
         )
-    lvl = np.asarray(interference_db, np.float64)
-    eff = np.where(narrowband, lvl - 12.0, lvl)
-    n = eff.shape
-    return RadioKPM(
-        sinr_db=22.0 + eff * 0.45 + rng.normal(0, 1.0, n),
-        rsrp_dbm=-78.0 + rng.normal(0, 2.0, n),
-        prb_util=np.clip(0.55 + 0.01 * lvl + rng.normal(0, 0.05, n), 0.0, 1.0),
-        mcs=np.clip(18 + 0.3 * eff + rng.normal(0, 1.0, n), 0.0, 27.0),
-        bler=np.clip(0.08 - 0.004 * eff + rng.normal(0, 0.02, n), 0.0, 1.0),
-    )
+    else:
+        lvl = np.asarray(interference_db, np.float64)
+        eff = np.where(narrowband, lvl - 12.0, lvl)
+        n = eff.shape
+        kpm = RadioKPM(
+            sinr_db=22.0 + eff * 0.45 + rng.normal(0, 1.0, n),
+            rsrp_dbm=-78.0 + rng.normal(0, 2.0, n),
+            prb_util=np.clip(0.55 + 0.01 * lvl + rng.normal(0, 0.05, n), 0.0, 1.0),
+            mcs=np.clip(18 + 0.3 * eff + rng.normal(0, 1.0, n), 0.0, 27.0),
+            bler=np.clip(0.08 - 0.004 * eff + rng.normal(0, 0.02, n), 0.0, 1.0),
+        )
+    if grant_share is not None:
+        kpm.prb_grant_share = grant_share
+    if buffer_bytes is not None:
+        kpm.buffer_bytes = buffer_bytes
+    return kpm
 
 
 def iq_spectrogram(interference_db: float, narrowband: bool,

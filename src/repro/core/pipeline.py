@@ -6,11 +6,17 @@ tail (edge) -> detections; log delay / energy / privacy / payload.
 
 The frame is decomposed into reusable stages
 
-    sense -> decide -> head -> encode -> uplink -> tail -> account
+    sense -> decide -> head -> encode -> grant -> uplink -> tail -> account
 
 so ``SplitInferencePipeline.run_frame`` is a straight composition and the
 multi-UE ``core/cell.py`` simulator reuses the same stages per UE while
-deferring the tail to the edge server's micro-batcher.
+deferring the tail to the edge server's micro-batcher.  The grant stage
+exists only on a shared cell: ``core/ran.py`` schedules every UE's
+payload over one PRB grid per TTI, so ``uplink`` time is the *scheduled*
+completion (MAC queuing + airtime + HARQ), not the isolated-link
+``bytes/rate``.  The single-UE pipeline (the paper's testbed: one UE, an
+otherwise idle cell) keeps the degenerate grant -- the whole grid, every
+slot -- which the calibrated channel model already equals.
 
 Model execution and compression are REAL (actual Swin forward + codec on
 this host); time and energy are *accounted* with the calibrated device and
@@ -55,10 +61,21 @@ class FrameLog:
     ue_id: int = 0
     queue_s: float = 0.0        # wait at the edge before the tail batch ran
     batch_size: int = 1         # occupancy of the tail batch that served us
+    # shared-cell MAC extensions (core/ran.py; defaults = isolated link)
+    prb_share: float = 1.0      # granted/offered PRBs while backlogged
+    harq_retx: int = 0          # HARQ retransmissions this frame
+    deadline_s: float = float("inf")   # frame budget (RAN-scheduled cells)
+    air_s: float = 0.0          # radio-active time (= tx_s on isolated links;
+                                # < tx_s on a contended cell, where tx_s also
+                                # counts slots spent waiting for grants)
 
     @property
     def energy_j(self) -> float:
         return self.energy_inf_j + self.energy_tx_j
+
+    @property
+    def deadline_miss(self) -> bool:
+        return self.delay_s > self.deadline_s
 
 
 # ---------------------------------------------------------------------------
@@ -88,9 +105,13 @@ class UplinkResult:
 
 
 def sense_stage(interference_db: float, narrowband: bool,
-                rng: np.random.Generator) -> Tuple[RadioKPM, np.ndarray]:
-    """Sample what the RAN exposes this frame: KPMs + IQ spectrogram."""
-    kpm = observe_kpms(interference_db, narrowband, rng)
+                rng: np.random.Generator, grant_share=None,
+                buffer_bytes=None) -> Tuple[RadioKPM, np.ndarray]:
+    """Sample what the RAN exposes this frame: KPMs + IQ spectrogram.
+    On a scheduled cell the MAC's grant history / buffer status ride along
+    as KPM fields (no extra rng draws; core/ran.py)."""
+    kpm = observe_kpms(interference_db, narrowband, rng,
+                       grant_share=grant_share, buffer_bytes=buffer_bytes)
     spec = iq_spectrogram(interference_db, narrowband, rng)
     return kpm, spec
 
@@ -201,17 +222,25 @@ def tail_stage(plan: SplitPlan, system: Calibrated, payload, option: str,
 def account_stage(system: Calibrated, option: str, interference_db: float,
                   head: HeadResult, enc: EncodeResult, up: UplinkResult,
                   tail_s: float, *, queue_s: float = 0.0, batch_size: int = 1,
-                  ue_id: int = 0, predicted: Optional[Prediction] = None
-                  ) -> FrameLog:
+                  ue_id: int = 0, predicted: Optional[Prediction] = None,
+                  prb_share: float = 1.0, harq_retx: int = 0,
+                  deadline_s: float = float("inf"),
+                  air_s: Optional[float] = None) -> FrameLog:
     """Fold stage timings into delay + energy, paper §V style.
 
     The UE power analyzer integrates over the whole frame interval: active
     while computing, idle while waiting for uplink + edge (incl. any cell
-    queueing delay)."""
+    queueing delay).  ``air_s`` is the radio-active time the TX power is
+    charged for; on an isolated link it equals ``tx_s`` (the paper's
+    setting), on a RAN-scheduled cell it is the granted slots only --
+    charging the whole MAC wait at TX power would inflate UE radio energy
+    by ~1/prb_share (slots without a grant idle the radio)."""
+    if air_s is None:
+        air_s = up.tx_s
     wait_s = up.tx_s + up.path_s + queue_s + tail_s
     e_inf = (system.ue.power_active_w * head.head_s
              + system.ue.power_idle_w * wait_s)
-    e_tx = system.radio.tx_energy_j(up.tx_s, interference_db)
+    e_tx = system.radio.tx_energy_j(air_s, interference_db)
     return FrameLog(option=option, interference_db=interference_db,
                     delay_s=head.head_s + enc.quant_s + up.tx_s + up.path_s
                     + queue_s + tail_s,
@@ -220,7 +249,9 @@ def account_stage(system: Calibrated, option: str, interference_db: float,
                     energy_inf_j=e_inf, energy_tx_j=e_tx,
                     raw_bytes=enc.raw_bytes, compressed_bytes=enc.compressed_bytes,
                     rate_bps=up.rate_bps, predicted=predicted,
-                    ue_id=ue_id, queue_s=queue_s, batch_size=batch_size)
+                    ue_id=ue_id, queue_s=queue_s, batch_size=batch_size,
+                    prb_share=prb_share, harq_retx=harq_retx,
+                    deadline_s=deadline_s, air_s=air_s)
 
 
 # ---------------------------------------------------------------------------
@@ -307,11 +338,10 @@ def build_controller(system: Calibrated, *, path: Optional[PathModel] = None,
                      ) -> AdaptiveController:
     """Train the throughput estimator and wire up one AF controller.
     ``AdaptiveController.clone()`` spawns per-UE copies that share it."""
+    from repro.core.adaptive import DEFAULT_PRIVACY_PROFILE
     est = train_estimator(system.channel, "kpm+spec", n_train=1024,
                           steps=200, seed=seed)
-    prof = privacy_profile or {UE_ONLY: 0.0, SERVER_ONLY: 1.0,
-                               "split1": 0.53, "split2": 0.42,
-                               "split3": 0.33, "split4": 0.27}
+    prof = privacy_profile or dict(DEFAULT_PRIVACY_PROFILE)
     return AdaptiveController(
         system=system, estimator=est,
         objective=objective or Objective(),

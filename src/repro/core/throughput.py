@@ -64,6 +64,19 @@ def _mlp(params, x):
 
 
 @dataclass
+class ConstantRateEstimator:
+    """Degenerate estimator: predicts one fixed rate regardless of the
+    radio observations.  Baseline for ablations and the clean probe for
+    contention studies -- any load response in an
+    ``AdaptiveController`` fed by it must come from the MAC's
+    granted-rate feedback (core/ran.py), not from sensing."""
+    rate_bps: float
+
+    def predict(self, kpm: RadioKPM, spec: Optional[np.ndarray]) -> float:
+        return self.rate_bps
+
+
+@dataclass
 class ThroughputEstimator:
     mode: str = "kpm+spec"
     hidden: int = 64

@@ -205,6 +205,47 @@ def test_cell_ue_only_bypasses_edge(system):
     assert all(l.tail_s == 0.0 and l.queue_s == 0.0 for l in res.logs)
 
 
+# -- legacy radio regime stays bit-compatible with the RAN layer present ------
+
+def test_legacy_uplink_formula_bit_compatible(system):
+    """With ``ran=None`` (the default) the uplink is EXACTLY the pre-RAN
+    formula: one vectorized sample_rate draw, tx = bytes/rate, then the
+    path draw -- replayed here draw for draw."""
+    plan = SwinSplitPlan(SWIN_FULL, params=None)
+    n, seed, lvl = 8, 21, -20.0
+    sim = CellSimulator(plan=plan, system=system, n_ues=n, seed=seed,
+                        execute_model=False)
+    res = sim.run(np.full((1, n), lvl), option="split2")
+    rng = np.random.default_rng(seed)
+    rates = system.channel.sample_rate(np.full(n, lvl), rng,
+                                       narrowband=np.zeros(n, bool))
+    comp = system.compressed_bytes["split2"]
+    path = rng.normal(0.0, 0.0, 0)  # no draws consumed between the stages
+    exp_tx = system.channel.tx_time_s(np.full(n, comp, float), rates)
+    for i, log in enumerate(res.logs):
+        assert log.rate_bps == rates[i]
+        assert log.tx_s == exp_tx[i]
+        # and the RAN extension fields sit at their isolated-link defaults
+        assert log.prb_share == 1.0 and log.harq_retx == 0
+        assert log.deadline_s == float("inf") and not log.deadline_miss
+
+
+def test_ran_mode_keeps_shared_rng_stream_aligned(system):
+    """Switching the MAC on consumes the SAME shared-rng draws (one
+    vectorized fading normal, then the path latencies), so RAN-vs-legacy
+    comparisons are rng-paired: identical path jitter, same fading."""
+    from repro.core.ran import RanCell, RanConfig, make_policy
+    plan = SwinSplitPlan(SWIN_FULL, params=None)
+    kw = dict(plan=plan, system=system, n_ues=6, seed=5, execute_model=False)
+    lv = np.full((2, 6), -30.0)
+    legacy = CellSimulator(**kw).run(lv, option="split1")
+    ran = CellSimulator(ran=RanCell(policy=make_policy("rr"),
+                                    cfg=RanConfig(tti_s=0.005)),
+                        **kw).run(lv, option="split1")
+    for ll, lr in zip(legacy.logs, ran.logs):
+        assert ll.path_s == lr.path_s
+
+
 # -- vectorized channel -------------------------------------------------------
 
 def test_vectorized_mean_rate_matches_scalar(system):
