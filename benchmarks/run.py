@@ -16,12 +16,19 @@ import traceback
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="smoke mode (CI): the registry below already runs "
+                         "every bench in its reduced/fast variant; this flag "
+                         "exists so automation can state the intent "
+                         "explicitly and future slow registrations must "
+                         "respect it")
     args = ap.parse_args()
 
     from benchmarks import (bench_adaptive, bench_cell, bench_compression,
                             bench_dupf, bench_e2e_delay,
                             bench_energy_breakdown, bench_energy_privacy,
-                            bench_estimator, bench_ran, bench_tx_energy)
+                            bench_estimator, bench_ran, bench_streaming,
+                            bench_tx_energy)
 
     benches = [
         # fast mode: reduced model, same legacy-vs-fused comparison + the
@@ -38,6 +45,9 @@ def main() -> int:
         # fast mode: smaller load sweep + coarser TTI, same acceptance
         # anchors (idle-cell calibration, load degradation, EDF vs RR)
         ("ran_scheduler", lambda: bench_ran.run(fast=True)),
+        # fast mode: shorter trace + coarser fps sweep, same acceptance
+        # anchors (miss/drop strictly rise with load, lock-step flat)
+        ("streaming_backlog", lambda: bench_streaming.run(fast=True)),
     ]
     if args.only:
         benches = [(n, f) for n, f in benches if args.only in n]

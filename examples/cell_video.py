@@ -12,8 +12,16 @@ grid, scheduled per TTI by round-robin (rr), proportional-fair (pf), or
 deadline-aware EDF (edf), with HARQ retransmissions -- the per-UE table
 then also shows PRB share, HARQ count, and deadline misses.
 
+``--fps`` switches from the lock-step engine to the continuous-time
+event engine (core/timeline.py): every UE captures on its own frame
+clock (optionally jittered by ``--jitter``), head/encode of frame N+1
+overlaps uplink of frame N inside the ``--inflight`` window, congestion
+carries over between frames, and the summary adds drop rate, effective
+fps and frame age at detection.
+
     PYTHONPATH=src python examples/cell_video.py [--ues 6] [--frames 12] \
-        [--policy edf] [--budget 2.5]
+        [--policy edf] [--budget 2.5] [--fps 0.5] [--jitter 0.05] \
+        [--inflight 2]
 """
 import argparse
 
@@ -44,6 +52,14 @@ def main():
     ap.add_argument("--budget", type=float, default=2.5,
                     help="per-frame E2E deadline in seconds (EDF urgency / "
                          "deadline-miss accounting; needs --policy)")
+    ap.add_argument("--fps", type=float, default=None,
+                    help="per-UE capture rate: run the continuous-time "
+                         "event engine instead of the lock-step slots")
+    ap.add_argument("--jitter", type=float, default=0.0,
+                    help="per-frame capture jitter in seconds (needs --fps)")
+    ap.add_argument("--inflight", type=int, default=None,
+                    help="max frames a UE may have in flight before it "
+                         "skips a capture (needs --fps; default unbounded)")
     args = ap.parse_args()
 
     cfg = reduced()
@@ -71,26 +87,39 @@ def main():
         ran=ran, frame_budget_s=args.budget)
 
     trace = cell_interference_traces(args.frames, args.ues, seed=1)
-    res = cell.run(trace, imgs=imgs, option=args.fixed, keep_outputs=True)
+    if args.fps is not None:
+        res = cell.run_stream(trace, imgs=imgs, option=args.fixed,
+                              fps=args.fps, jitter_s=args.jitter,
+                              inflight=args.inflight, keep_outputs=True)
+    else:
+        res = cell.run(trace, imgs=imgs, option=args.fixed, keep_outputs=True)
 
+    streaming = args.fps is not None
     mac_cols = f" {'prb':>5s} {'harq':>4s} {'miss':>4s}" if ran else ""
+    drop_col = f" {'drop':>4s} {'age':>7s}" if streaming else ""
     print(f"{'ue':>3s} {'frames':>6s} {'options used':24s} {'delay':>8s} "
-          f"{'queue':>7s} {'batch':>5s}{mac_cols}")
+          f"{'queue':>7s} {'batch':>5s}{mac_cols}{drop_col}")
     for u in range(args.ues):
         logs = res.ue_logs(u)
-        opts = ",".join(sorted({l.option for l in logs}))
+        done = [l for l in logs if not l.dropped]
+        opts = ",".join(sorted({l.option for l in done}))
         mac = ""
         if ran:
             # share over frames that actually transmitted (ue_only frames
             # carry the isolated-link default 1.0 and would inflate it)
-            shares = [l.prb_share for l in logs if l.tx_s > 0]
+            shares = [l.prb_share for l in done if l.tx_s > 0]
             mac = (f" {np.mean(shares) if shares else 0.0:5.2f}"
-                   f" {sum(l.harq_retx for l in logs):4d}"
+                   f" {sum(l.harq_retx for l in done):4d}"
                    f" {sum(l.deadline_miss for l in logs):4d}")
-        print(f"{u:3d} {len(logs):6d} {opts:24s} "
-              f"{np.mean([l.delay_s for l in logs]):7.3f}s "
-              f"{np.mean([l.queue_s for l in logs]):6.3f}s "
-              f"{np.mean([l.batch_size for l in logs]):5.1f}{mac}")
+        stream_cols = ""
+        if streaming:
+            stream_cols = (f" {sum(l.dropped for l in logs):4d}"
+                           f" {np.mean([l.age_s for l in done]) if done else 0.0:6.2f}s")
+        print(f"{u:3d} {len(done):6d} {opts:24s} "
+              f"{np.mean([l.delay_s for l in done]) if done else 0.0:7.3f}s "
+              f"{np.mean([l.queue_s for l in done]) if done else 0.0:6.3f}s "
+              f"{np.mean([l.batch_size for l in done]) if done else 0.0:5.1f}"
+              f"{mac}{stream_cols}")
 
     st = res.stats
     n_det = sum(lv["cls"].shape[-1] for lv in res.outputs[-1][0]) \
@@ -107,6 +136,10 @@ def main():
         print(f"RAN ({args.policy}): deadline-miss rate "
               f"{res.deadline_miss_rate:.2f} against a {args.budget:.1f}s "
               f"frame budget")
+    if streaming:
+        print(f"stream ({args.fps:g} fps nominal): effective "
+              f"{st.effective_fps:.2f} fps, drop rate {res.drop_rate:.2f}, "
+              f"mean frame age at detection {res.mean_age_s:.2f} s")
 
 
 if __name__ == "__main__":

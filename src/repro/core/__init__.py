@@ -14,4 +14,6 @@ from repro.core.channel import (ChannelModel, PathModel, dupf_path,    # noqa: F
                                 cupf_path, INTERFERENCE_LEVELS)
 from repro.core.calibration import calibrate, Calibrated, PAPER        # noqa: F401
 from repro.core.adaptive import AdaptiveController, Objective          # noqa: F401
-from repro.core.pipeline import SplitInferencePipeline, build_pipeline # noqa: F401
+from repro.core.pipeline import (SplitInferencePipeline, build_pipeline,  # noqa: F401
+                                 FrameSource)
+from repro.core.timeline import EdgeQueue, run_stream                  # noqa: F401

@@ -78,6 +78,23 @@ class AdaptiveController:
     # (the paper's single-UE testbed) never sets it and selection is
     # unchanged.
     _granted_rate: Optional[float] = None
+    # streaming feedback (core/timeline.py).  ``frame_period_s`` is the
+    # UE's capture period (1/fps); the timeline engine sets it and feeds
+    # ``observe_stream`` per completed/dropped frame.  While frames are
+    # being dropped the pipeline demonstrably cannot sustain the capture
+    # rate, so options whose predicted delay exceeds one frame period are
+    # treated as infeasible -- selection moves to a split the stream can
+    # actually sustain.  Lock-step engines never set these: zero drop EWMA
+    # keeps ``decide`` bit-identical to the pre-timeline behavior.
+    frame_period_s: Optional[float] = None
+    _drop_ewma: float = 0.0
+    _age_ewma: float = 0.0
+    drop_backoff: float = 0.05       # drop EWMA above which delay must fit
+                                     # inside one frame period
+    age_backoff: float = 2.0         # ... and frame-age EWMA (in periods)
+                                     # above which likewise: an unbounded
+                                     # in-flight window never drops, but a
+                                     # growing backlog shows up as age
 
     # -- per-UE replication (multi-UE cell) ----------------------------------
     def clone(self) -> "AdaptiveController":
@@ -86,7 +103,8 @@ class AdaptiveController:
         ``CellSimulator`` spawns one per UE."""
         import dataclasses
         return dataclasses.replace(self, _current=None, _ratio=1.0,
-                                   _granted_rate=None)
+                                   _granted_rate=None, _drop_ewma=0.0,
+                                   _age_ewma=0.0)
 
     def spawn(self, n: int) -> List["AdaptiveController"]:
         return [self.clone() for _ in range(n)]
@@ -106,6 +124,17 @@ class AdaptiveController:
                                   if self._granted_rate is None else
                                   0.7 * self._granted_rate
                                   + 0.3 * realized_rate_bps)
+
+    def observe_stream(self, age_s: float, dropped: bool):
+        """Per-frame streaming feedback from the event timeline: the age
+        of the frame at detection and whether the in-flight window forced
+        a skip.  Drops raise ``_drop_ewma`` (decide then requires delay <=
+        one frame period, see ``frame_period_s``); completions decay it
+        and track the age EWMA the frame-age knob optimizes against."""
+        self._drop_ewma = 0.8 * self._drop_ewma + 0.2 * float(dropped)
+        if not dropped:
+            self._age_ewma = (age_s if self._age_ewma == 0.0
+                              else 0.7 * self._age_ewma + 0.3 * age_s)
 
     def relax_grant(self, link_rate_bps: float):
         """Called on frames the UE sent nothing uplink: with no grant to
@@ -164,10 +193,22 @@ class AdaptiveController:
             rate = min(rate, self._granted_rate)
         preds = [self.predict(o, rate) for o in options]
         feas = [p for p in preds if p.feasible] or preds
+        if self.frame_period_s is not None and (
+                self._drop_ewma > self.drop_backoff
+                or self._age_ewma > self.age_backoff * self.frame_period_s):
+            # the stream is falling behind -- dropping frames, or (with an
+            # unbounded in-flight window, which never drops) detections
+            # aging past the backlog threshold: only options whose delay
+            # fits inside one capture period can sustain the fps; fall
+            # back to the plain feasible set if none does (best effort)
+            feas = [p for p in feas
+                    if p.delay_s <= self.frame_period_s] or feas
         best = min(feas, key=lambda p: p.cost)
         if self._current is not None and best.option != self._current:
             cur = next((p for p in preds if p.option == self._current), None)
-            if cur is not None and cur.feasible and \
+            # the hold must stay inside the candidate set: an option the
+            # drop back-off just excluded cannot be held onto
+            if cur is not None and cur.feasible and cur in feas and \
                cur.cost <= best.cost * (1.0 + self.hysteresis):
                 best = cur                              # hysteresis hold
         self._current = best.option

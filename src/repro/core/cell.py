@@ -40,6 +40,13 @@ Two radio regimes, orthogonal to the execution regimes:
     buffer status feed back into next-frame KPMs and each cloned
     controller's granted-rate estimate, so split selection becomes
     contention-aware.
+
+And two clock regimes: ``run`` is the lock-step engine (one slot per
+frame, the clock re-anchors every slot, queues drain within the slot),
+``run_stream`` is the continuous-time event engine (core/timeline.py:
+per-UE frame clocks, streaming head/uplink/tail overlap, cross-frame
+backlog carry-over, frame skipping) -- configured degenerate it
+reproduces ``run`` rng-paired.
 """
 from __future__ import annotations
 
@@ -54,9 +61,10 @@ from repro.core.calibration import Calibrated
 from repro.core.channel import INTERFERENCE_LEVELS, PathModel, dupf_path
 from repro.core.compression import ActivationCodec
 from repro.core.ran import GrantReport, RanCell, UplinkRequest
-from repro.core.pipeline import (EncodeResult, FrameLog, HeadResult,
-                                 UplinkResult, account_stage, decide_stage,
-                                 encode_group_stage, encode_stage, sense_stage)
+from repro.core.pipeline import (EncodeResult, FrameLog, FrameSource,
+                                 HeadResult, UplinkResult, account_stage,
+                                 decide_stage, encode_group_stage,
+                                 encode_stage, sense_stage)
 from repro.core.splitting import SERVER_ONLY, UE_ONLY, SplitPlan, SwinSplitPlan
 
 DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
@@ -178,9 +186,17 @@ class CellStats:
     n_requests: int = 0
     n_batches: int = 0
     edge_busy_s: float = 0.0      # total edge compute time
-    span_s: float = 0.0           # sum of per-slot edge makespans
+    span_s: float = 0.0           # lock-step: sum of per-slot edge
+                                  # makespans; event engine: wall-clock span
     occupancy_sum: float = 0.0    # sum of size/padded over batches
     queue_sum_s: float = 0.0
+    # continuous-time extensions (core/timeline.py; zero on lock-step runs)
+    n_completed: int = 0          # frames that reached a detection
+    n_dropped: int = 0            # captures skipped by the in-flight window
+    age_sum_s: float = 0.0        # sum of frame ages at detection
+    wall_s: float = 0.0           # first capture -> last completion
+    n_ues: int = 0
+    ue_active_s: float = 0.0      # total UE compute-active wall time
 
     def absorb_slot(self, records: List[BatchRecord],
                     served: Dict[int, ServedTail]):
@@ -193,6 +209,16 @@ class CellStats:
             self.span_s += max(r.start_s + r.compute_s for r in records)
         self.occupancy_sum += sum(r.size / r.padded for r in records)
         self.queue_sum_s += sum(s.queue_s for s in served.values())
+
+    def absorb_batch(self, record: BatchRecord,
+                     served: Sequence[ServedTail]):
+        """One executed batch on the continuous timeline (the event
+        engine has no per-slot makespans; span is set to wall-clock)."""
+        self.n_requests += record.size
+        self.n_batches += 1
+        self.edge_busy_s += record.compute_s
+        self.occupancy_sum += record.size / record.padded
+        self.queue_sum_s += sum(s.queue_s for s in served)
 
     @property
     def edge_utilization(self) -> float:
@@ -210,26 +236,64 @@ class CellStats:
     def mean_queue_s(self) -> float:
         return self.queue_sum_s / self.n_requests if self.n_requests else 0.0
 
+    # -- streaming aggregates (meaningful after core/timeline.py runs) -------
+    @property
+    def drop_rate(self) -> float:
+        total = self.n_completed + self.n_dropped
+        return self.n_dropped / total if total else 0.0
+
+    @property
+    def mean_age_s(self) -> float:
+        return self.age_sum_s / self.n_completed if self.n_completed else 0.0
+
+    @property
+    def effective_fps(self) -> float:
+        """Completed detections per second per UE over the wall span --
+        the rate the stream actually sustains, vs. the capture fps."""
+        if not (self.wall_s and self.n_ues):
+            return 0.0
+        return self.n_completed / self.wall_s / self.n_ues
+
 
 @dataclass
 class CellResult:
     logs: List[FrameLog]          # all frames, all UEs (log.ue_id says whose)
     stats: CellStats
     outputs: Optional[List[Dict[int, Any]]] = None   # per-slot detections
+    # per-UE wall-clock energy (event engine only: active/idle intervals
+    # without the per-frame overlap double count; energy.interval_energy_j)
+    ue_wall_energy_j: Optional[List[float]] = None
 
     def ue_logs(self, ue_id: int) -> List[FrameLog]:
         return [l for l in self.logs if l.ue_id == ue_id]
 
     @property
+    def completed_logs(self) -> List[FrameLog]:
+        return [l for l in self.logs if not l.dropped]
+
+    @property
     def mean_delay_s(self) -> float:
-        return float(np.mean([l.delay_s for l in self.logs]))
+        done = self.completed_logs
+        return float(np.mean([l.delay_s for l in done])) if done else 0.0
 
     @property
     def deadline_miss_rate(self) -> float:
         """Fraction of frames whose E2E delay exceeded the frame budget
-        (only meaningful on a RAN-scheduled cell, where the budget is
-        logged; legacy logs carry an infinite deadline and never miss)."""
+        (only meaningful when a budget is logged: RAN-scheduled cells and
+        event-engine runs with ``budget_s``; legacy lock-step logs carry
+        an infinite deadline and never miss).  Dropped frames count as
+        missed -- they never produced a detection at all."""
         return float(np.mean([l.deadline_miss for l in self.logs]))
+
+    @property
+    def drop_rate(self) -> float:
+        return float(np.mean([l.dropped for l in self.logs])) \
+            if self.logs else 0.0
+
+    @property
+    def mean_age_s(self) -> float:
+        done = self.completed_logs
+        return float(np.mean([l.age_s for l in done])) if done else 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -470,19 +534,39 @@ class CellSimulator:
         trace = np.asarray(interference, float)
         if trace.ndim == 1:
             trace = trace[:, None]
+        src = FrameSource(imgs)
         all_logs: List[FrameLog] = []
         all_outs: List[Dict[int, Any]] = []
         for t in range(trace.shape[0]):
             frame_imgs = None
             if imgs is not None:
-                frame_imgs = [imgs[(t + i) % len(imgs)]
-                              for i in range(self.n_ues)]
+                frame_imgs = [src.frame(t, i) for i in range(self.n_ues)]
             logs, outs = self.step(trace[t], imgs=frame_imgs, option=option)
+            for log in logs:
+                log.frame_idx = t
             all_logs.extend(logs)
             if keep_outputs:
                 all_outs.append(outs)
         return CellResult(logs=all_logs, stats=self.stats,
                           outputs=all_outs if keep_outputs else None)
+
+    def run_stream(self, interference, imgs=None,
+                   option: Optional[str] = None, *, fps=2.0,
+                   jitter_s=0.0, inflight: Optional[int] = None,
+                   budget_s: Optional[float] = None,
+                   keep_outputs: bool = False) -> CellResult:
+        """Run the SAME cell on the continuous-time event engine
+        (core/timeline.py): per-UE frame clocks (``fps``/``jitter_s``
+        scalar or per-UE), streaming head/uplink/tail overlap bounded by
+        the ``inflight`` window (None = unbounded), cross-frame backlog
+        carry-over in the MAC and at the edge, and capture-anchored
+        deadlines.  Configured degenerate (uniform fps, zero jitter,
+        unbounded window, load that drains within a frame period) it
+        reproduces ``run``'s per-frame logs rng-paired."""
+        from repro.core.timeline import run_stream as _run_stream
+        return _run_stream(self, interference, imgs=imgs, option=option,
+                           fps=fps, jitter_s=jitter_s, inflight=inflight,
+                           budget_s=budget_s, keep_outputs=keep_outputs)
 
 
 def cell_interference_traces(n_frames: int, n_ues: int, seed: int = 0,

@@ -62,4 +62,21 @@ class RadioProfile:
         return self.tx_power_w(interference_db) * tx_time_s
 
 
+def interval_energy_j(profile: DeviceProfile, active_s: float,
+                      wall_s: float) -> float:
+    """Wall-clock compute energy over one device's whole run: ``active_s``
+    seconds at active power, the remainder of ``wall_s`` at idle power.
+
+    The per-frame accounting (``pipeline.account_stage``) integrates each
+    frame's interval separately, which double-counts wall time once the
+    event timeline pipelines frames (frame N idles through its uplink
+    while the same UE is *active* on frame N+1's head).  The timeline
+    engine therefore also reports this interval form per UE: active
+    intervals are the union of head+encode busy time, everything else in
+    the UE's wall span is idle.  Radio TX energy stays per-frame
+    (``RadioProfile.tx_energy_j`` over the granted airtime)."""
+    idle_s = max(wall_s - active_s, 0.0)
+    return profile.power_active_w * active_s + profile.power_idle_w * idle_s
+
+
 WH_PER_J = 1.0 / 3600.0

@@ -6,11 +6,18 @@ tail (edge) -> detections; log delay / energy / privacy / payload.
 
 The frame is decomposed into reusable stages
 
-    sense -> decide -> head -> encode -> grant -> uplink -> tail -> account
+    capture -> sense -> decide -> head -> encode -> grant -> uplink
+            -> tail -> account
 
 so ``SplitInferencePipeline.run_frame`` is a straight composition and the
 multi-UE ``core/cell.py`` simulator reuses the same stages per UE while
-deferring the tail to the edge server's micro-batcher.  The grant stage
+deferring the tail to the edge server's micro-batcher.  The capture
+stage anchors each frame's clock: lock-step engines capture at slot
+time zero, the continuous-time event engine (``core/timeline.py``,
+``run_stream``) emits per-UE captures on one absolute cell-wide clock
+and schedules the same stage functions by absolute timestamps --
+``FrameLog.capture_s`` / ``deadline_s`` / ``age_s`` are anchored there.
+Frames come from one ``FrameSource`` round-robin feed.  The grant stage
 exists only on a shared cell: ``core/ran.py`` schedules every UE's
 payload over one PRB grid per TTI, so ``uplink`` time is the *scheduled*
 completion (MAC queuing + airtime + HARQ), not the isolated-link
@@ -68,6 +75,17 @@ class FrameLog:
     air_s: float = 0.0          # radio-active time (= tx_s on isolated links;
                                 # < tx_s on a contended cell, where tx_s also
                                 # counts slots spent waiting for grants)
+    # continuous-time extensions (core/timeline.py; lock-step defaults).
+    # ``capture_s`` anchors the frame on the shared absolute clock, so
+    # ``deadline_s`` is an absolute instant (= capture + budget) instead of
+    # a budget that silently re-anchors every slot; cross-slot lateness is
+    # countable.  Lock-step runs keep capture_s = 0, so deadline_s degrades
+    # to the per-slot budget and nothing changes.
+    frame_idx: int = 0          # per-UE capture index
+    capture_s: float = 0.0      # absolute capture timestamp
+    age_s: float = 0.0          # frame age at detection (completion - capture;
+                                # == delay_s when nothing carries over)
+    dropped: bool = False       # skipped by the in-flight window policy
 
     @property
     def energy_j(self) -> float:
@@ -75,7 +93,25 @@ class FrameLog:
 
     @property
     def deadline_miss(self) -> bool:
-        return self.delay_s > self.deadline_s
+        if self.dropped:
+            return True
+        return self.capture_s + self.delay_s > self.deadline_s
+
+
+@dataclass(frozen=True)
+class FrameSource:
+    """Round-robin frame feed over a finite image list -- THE seam the
+    per-UE frame clocks (core/timeline.py) plug into.  ``frame(k, ue)``
+    is what both the single-UE trace loop (``imgs[i % len]``) and the
+    cell's per-slot fan-out (``imgs[(t + i) % len]``) used to spell out
+    inline; UE ``u`` watches the stream offset by ``u`` frames so a cell
+    of UEs does not all show the edge identical images."""
+    imgs: Optional[Sequence[Any]] = None
+
+    def frame(self, frame_idx: int, ue_id: int = 0):
+        if self.imgs is None:
+            return None
+        return self.imgs[(frame_idx + ue_id) % len(self.imgs)]
 
 
 # ---------------------------------------------------------------------------
@@ -225,7 +261,10 @@ def account_stage(system: Calibrated, option: str, interference_db: float,
                   ue_id: int = 0, predicted: Optional[Prediction] = None,
                   prb_share: float = 1.0, harq_retx: int = 0,
                   deadline_s: float = float("inf"),
-                  air_s: Optional[float] = None) -> FrameLog:
+                  air_s: Optional[float] = None,
+                  extra_wait_s: float = 0.0, capture_s: float = 0.0,
+                  frame_idx: int = 0,
+                  age_s: Optional[float] = None) -> FrameLog:
     """Fold stage timings into delay + energy, paper §V style.
 
     The UE power analyzer integrates over the whole frame interval: active
@@ -234,16 +273,27 @@ def account_stage(system: Calibrated, option: str, interference_db: float,
     charged for; on an isolated link it equals ``tx_s`` (the paper's
     setting), on a RAN-scheduled cell it is the granted slots only --
     charging the whole MAC wait at TX power would inflate UE radio energy
-    by ~1/prb_share (slots without a grant idle the radio)."""
+    by ~1/prb_share (slots without a grant idle the radio).
+
+    ``extra_wait_s`` carries waits the per-frame stage results cannot see
+    (the event timeline's compute-busy delay before the head could even
+    start); it extends the frame interval at idle power.  ``capture_s``,
+    ``frame_idx`` and ``age_s`` anchor the log on the absolute clock; the
+    lock-step engines leave them at their zero defaults (``age_s`` then
+    equals ``delay_s``).  Under streaming pipelining per-frame intervals
+    of ONE UE overlap in wall time; the timeline engine additionally
+    reports the non-double-counted per-UE wall-clock energy
+    (``energy.interval_energy_j``)."""
     if air_s is None:
         air_s = up.tx_s
-    wait_s = up.tx_s + up.path_s + queue_s + tail_s
+    wait_s = up.tx_s + up.path_s + queue_s + tail_s + extra_wait_s
     e_inf = (system.ue.power_active_w * head.head_s
              + system.ue.power_idle_w * wait_s)
     e_tx = system.radio.tx_energy_j(air_s, interference_db)
+    delay_s = (head.head_s + enc.quant_s + up.tx_s + up.path_s
+               + queue_s + tail_s + extra_wait_s)
     return FrameLog(option=option, interference_db=interference_db,
-                    delay_s=head.head_s + enc.quant_s + up.tx_s + up.path_s
-                    + queue_s + tail_s,
+                    delay_s=delay_s,
                     head_s=head.head_s, quant_s=enc.quant_s, tx_s=up.tx_s,
                     path_s=up.path_s, tail_s=tail_s,
                     energy_inf_j=e_inf, energy_tx_j=e_tx,
@@ -251,7 +301,9 @@ def account_stage(system: Calibrated, option: str, interference_db: float,
                     rate_bps=up.rate_bps, predicted=predicted,
                     ue_id=ue_id, queue_s=queue_s, batch_size=batch_size,
                     prb_share=prb_share, harq_retx=harq_retx,
-                    deadline_s=deadline_s, air_s=air_s)
+                    deadline_s=deadline_s, air_s=air_s,
+                    frame_idx=frame_idx, capture_s=capture_s,
+                    age_s=delay_s if age_s is None else age_s)
 
 
 # ---------------------------------------------------------------------------
@@ -298,11 +350,37 @@ class SplitInferencePipeline:
     # -- traces ------------------------------------------------------------------
     def run_trace(self, imgs, interference_trace, option: Optional[str] = None
                   ) -> List[FrameLog]:
+        src = FrameSource(imgs if self.execute_model else None)
         logs = []
         for i, lvl in enumerate(interference_trace):
-            img = imgs[i % len(imgs)] if self.execute_model else None
-            logs.append(self.run_frame(img, lvl, option))
+            log = self.run_frame(src.frame(i), lvl, option)
+            log.frame_idx = i
+            logs.append(log)
         return logs
+
+    def run_stream(self, interference_trace, imgs=None,
+                   option: Optional[str] = None, *, fps: float = 2.0,
+                   jitter_s: float = 0.0, inflight: Optional[int] = None,
+                   budget_s: Optional[float] = None):
+        """Run the SAME single-UE system on the continuous-time event
+        engine (core/timeline.py): the frame clock ticks at ``fps`` with
+        capture ``jitter_s``, head/encode of frame N+1 overlaps uplink of
+        frame N inside the ``inflight`` window, and congestion carries
+        over between frames instead of re-anchoring each one.  Returns a
+        ``core.cell.CellResult`` for the one-UE cell.  (The event engine
+        owns its rng discipline -- per-frame draws pair with the
+        multi-UE cell engines, not with ``run_trace``.)"""
+        from repro.core.cell import CellSimulator
+        from repro.core.timeline import run_stream as _run_stream
+        sim = CellSimulator(
+            plan=self.plan, system=self.system, codec=self.codec,
+            controller=self.controller, path=self.path,
+            narrowband=self.narrowband, seed=self.seed, n_ues=1,
+            execute_model=self.execute_model)
+        trace = np.asarray(interference_trace, float).reshape(-1, 1)
+        return _run_stream(sim, trace, imgs=imgs, option=option, fps=fps,
+                           jitter_s=jitter_s, inflight=inflight,
+                           budget_s=budget_s)
 
 
 def build_pipeline(cfg=None, params=None, *, adaptive: bool = True,

@@ -376,3 +376,176 @@ class RanCell:
                            if act_slots[i] else 0.0),
                 mcs=mcs_index(float(bpp[i])))
         return reports
+
+
+# ---------------------------------------------------------------------------
+# continuous-TTI streaming MAC (core/timeline.py drives this)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StreamFlow:
+    """One frame's uplink living in the continuous MAC.  ``meta`` is the
+    caller's per-frame record (opaque here); ``cohort`` tags the capture
+    round the flow was admitted in (rng-pairing discipline, see
+    ``RanStream.advance``)."""
+    req: UplinkRequest
+    cohort: int
+    meta: object = None
+    rem_bits: float = 0.0
+    bpp: float = 0.0
+    granted: int = 0
+    act_slots: int = 0
+    n_tx: int = 0
+    n_retx: int = 0
+    finish_s: float = float("nan")
+
+    @property
+    def done(self) -> bool:
+        return self.rem_bits <= 0.0
+
+
+class RanStream:
+    """Continuous TTI clock over a ``RanCell``: per-UE byte queues persist
+    across frames, so a congested capture's overflow delays the next
+    frame's uplink instead of silently completing inside its own slot.
+
+    Differences from the lock-step ``serve_slot``:
+
+      * The TTI index ``k`` never resets; ``advance(until_s)`` executes
+        TTIs with start time strictly before ``until_s`` and returns the
+        flows that finished, with *absolute* enqueue/finish timestamps.
+      * A UE with several frames in flight is served head-of-line: only
+        its earliest un-drained flow is active per TTI (one byte queue
+        per UE, frames are segments of it).
+      * Rng discipline: per executed TTI one uniform is drawn per flow of
+        every *unretired* cohort, in admission order; a cohort retires
+        when ALL its flows have drained.  With one cohort in flight at a
+        time (the degenerate lock-step case) this is draw-for-draw the
+        ``serve_slot`` stream -- ``len(requests)`` uniforms per TTI until
+        the slot drains -- so the timeline engine configured degenerate
+        replays the lock-step grant trace exactly.
+      * TTIs where no flow is active are skipped without drawing (the
+        clock jumps to the next enqueue, like serve_slot's idle-gap jump).
+    """
+
+    def __init__(self, cell: RanCell):
+        self.cell = cell
+        self.cfg = cell.cfg
+        self._k = 0                      # continuous TTI index
+        self._flows: List[StreamFlow] = []   # admission order
+        self._cohort_open: Dict[int, int] = {}   # cohort -> undrained count
+
+    def enqueue(self, req: UplinkRequest, cohort: int,
+                meta: object = None) -> StreamFlow:
+        flow = StreamFlow(req=req, cohort=cohort, meta=meta,
+                          rem_bits=req.n_bytes * 8.0,
+                          bpp=float(self.cell.bits_per_prb(req.link_rate_bps)))
+        self._flows.append(flow)
+        self._cohort_open[cohort] = self._cohort_open.get(cohort, 0) + 1
+        return flow
+
+    def advance(self, until_s: float,
+                harq_rng: np.random.Generator) -> List[StreamFlow]:
+        """Run TTIs whose start is before ``until_s`` (pass ``inf`` to
+        drain).  Returns flows completed during this advance."""
+        cfg = self.cfg
+        finished: List[StreamFlow] = []
+        steps = 0
+        while True:
+            live = [f for f in self._flows if not f.done]
+            if not live:
+                break
+            now = self._k * cfg.tti_s
+            if now >= until_s - 1e-12:
+                break
+            enq = np.array([f.req.enqueue_s for f in live])
+            if not np.any(enq <= now):
+                nxt = int(math.ceil(float(enq.min()) / cfg.tti_s))
+                if nxt * cfg.tti_s >= until_s - 1e-12:
+                    break
+                self._k = max(self._k, nxt)
+                continue
+            if steps >= cfg.max_slots:
+                raise RuntimeError(
+                    f"RanStream: uplink queues not drained after "
+                    f"{cfg.max_slots} TTIs in one advance; raise "
+                    f"RanConfig.max_slots or reduce the offered load")
+            # draw list: every flow of an unretired cohort, admission order
+            drawn = [f for f in self._flows
+                     if self._cohort_open.get(f.cohort, 0) > 0]
+            n = len(drawn)
+            # head-of-line: only a UE's earliest un-drained flow is active
+            # (frames are segments of ONE per-UE byte queue; a drained
+            # flow does not block its UE's later frames)
+            hol_seen = set()
+            active = np.zeros(n, bool)
+            for i, f in enumerate(drawn):
+                if f.done or f.req.ue_id in hol_seen:
+                    continue
+                hol_seen.add(f.req.ue_id)
+                if f.req.enqueue_s <= now:
+                    active[i] = True
+            view = SlotView(
+                now_s=now, tti_s=cfg.tti_s, active=active,
+                remaining_bits=np.array([f.rem_bits for f in drawn]),
+                bits_per_prb=np.array([f.bpp for f in drawn]),
+                deadline_s=np.array([f.req.deadline_s for f in drawn]),
+                ue_ids=np.array([f.req.ue_id for f in drawn]),
+                n_prbs=cfg.n_prbs)
+            if active.any():
+                alloc = self.cell.policy.grant(view)
+                assert alloc.sum() <= cfg.n_prbs, \
+                    f"{self.cell.policy.name} over-granted the PRB grid"
+            else:
+                alloc = np.zeros(n, int)
+            sent = np.minimum(view.remaining_bits, alloc * view.bits_per_prb)
+            fail = (harq_rng.random(n) < cfg.bler_target) & (alloc > 0)
+            delivered = np.where(fail, 0.0, sent)
+            for i, f in enumerate(drawn):
+                if f.done:
+                    continue
+                f.rem_bits -= delivered[i]
+                f.granted += int(alloc[i])
+                f.act_slots += int(active[i])
+                f.n_tx += int(alloc[i] > 0)
+                f.n_retx += int(fail[i])
+                if f.rem_bits <= 1e-9:
+                    f.rem_bits = 0.0
+                    f.finish_s = now + cfg.tti_s
+                    finished.append(f)
+                    self._cohort_open[f.cohort] -= 1
+                    if self._cohort_open[f.cohort] == 0:
+                        self._retire(f.cohort)
+            self.cell.policy.observe(delivered, view)
+            self._k += 1
+            steps += 1
+        return finished
+
+    def _retire(self, cohort: int):
+        """Drop a fully-drained cohort's flows: they no longer count in
+        the draw list, so keeping them would only make every later TTI
+        rescan an ever-growing history (long streaming runs would go
+        quadratic in elapsed frames)."""
+        del self._cohort_open[cohort]
+        self._flows = [f for f in self._flows
+                       if not f.done or self._cohort_open.get(f.cohort, 0) > 0]
+
+    def report(self, flow: StreamFlow) -> GrantReport:
+        """GrantReport for a drained flow (absolute timestamps)."""
+        cfg = self.cfg
+        tx_s = float(flow.finish_s - flow.req.enqueue_s)
+        return GrantReport(
+            ue_id=flow.req.ue_id, n_bytes=flow.req.n_bytes,
+            enqueue_s=flow.req.enqueue_s, finish_s=float(flow.finish_s),
+            tx_s=tx_s, granted_prbs=flow.granted,
+            active_slots=flow.act_slots, n_tx=flow.n_tx,
+            n_harq_retx=flow.n_retx,
+            realized_rate_bps=(flow.req.n_bytes * 8.0 / tx_s
+                               if tx_s > 0 else 0.0),
+            prb_share=(flow.granted / (cfg.n_prbs * flow.act_slots)
+                       if flow.act_slots else 0.0),
+            mcs=mcs_index(flow.bpp))
+
+    @property
+    def backlog_bytes(self) -> float:
+        return sum(f.rem_bits for f in self._flows if not f.done) / 8.0

@@ -205,6 +205,79 @@ def test_cell_ue_only_bypasses_edge(system):
     assert all(l.tail_s == 0.0 and l.queue_s == 0.0 for l in res.logs)
 
 
+# -- interference traces ------------------------------------------------------
+
+def test_interference_traces_deterministic():
+    a = cell_interference_traces(20, 7, seed=4)
+    b = cell_interference_traces(20, 7, seed=4)
+    np.testing.assert_array_equal(a, b)
+    c = cell_interference_traces(20, 7, seed=5)
+    assert (a != c).any()
+
+
+def test_interference_traces_shape_and_levels():
+    from repro.core.channel import INTERFERENCE_LEVELS
+    tr = cell_interference_traces(50, 9, seed=1)
+    assert tr.shape == (50, 9)
+    assert set(np.unique(tr)) <= set(float(l) for l in INTERFERENCE_LEVELS)
+    # sticky walk: consecutive frames move at most one level
+    levels = np.asarray(INTERFERENCE_LEVELS, float)
+    idx = np.searchsorted(levels, tr)
+    assert np.abs(np.diff(idx, axis=0)).max() <= 1
+
+
+def test_interference_traces_custom_levels():
+    tr = cell_interference_traces(10, 3, seed=0, levels=(-12.0, -6.0),
+                                  p_move=1.0)
+    assert set(np.unique(tr)) <= {-12.0, -6.0}
+
+
+# -- CellStats edge cases ------------------------------------------------------
+
+def test_cellstats_zero_offload_slot():
+    """A slot where no UE offloads: absorb_slot sees no records and every
+    aggregate property stays finite (no division by zero)."""
+    from repro.core.cell import CellStats
+    st = CellStats()
+    st.absorb_slot([], {})
+    assert st.n_frames == 1 and st.n_requests == 0 and st.n_batches == 0
+    assert st.edge_utilization == 0.0
+    assert st.mean_batch_occupancy == 0.0
+    assert st.mean_batch_size == 0.0
+    assert st.mean_queue_s == 0.0
+    assert st.drop_rate == 0.0 and st.mean_age_s == 0.0
+    assert st.effective_fps == 0.0
+
+
+def test_cellstats_empty_batch_records_via_simulator(system):
+    """ue_only cell run: zero offloads end-to-end, stats stay clean."""
+    plan = SwinSplitPlan(SWIN_FULL, params=None)
+    cell = CellSimulator(plan=plan, system=system, n_ues=4, seed=0,
+                         execute_model=False)
+    res = cell.run(np.full((3, 4), -30.0), option=UE_ONLY)
+    st = res.stats
+    assert st.n_frames == 3 and st.n_requests == 0
+    assert st.span_s == 0.0 and st.edge_utilization == 0.0
+    assert res.mean_delay_s > 0.0
+
+
+def test_cellstats_absorb_batch_matches_slot_totals(system):
+    """The event engine's per-batch absorption reaches the same request/
+    busy/queue totals the per-slot form accumulates."""
+    from repro.core.cell import BatchRecord, CellStats, ServedTail
+    rec = BatchRecord(option="split1", size=3, padded=4, start_s=1.0,
+                      compute_s=0.05)
+    served = {i: ServedTail(tail_s=0.05, queue_s=0.01 * i, batch_size=3)
+              for i in range(3)}
+    a, b = CellStats(), CellStats()
+    a.absorb_slot([rec], served)
+    b.absorb_batch(rec, list(served.values()))
+    assert (a.n_requests, a.n_batches) == (b.n_requests, b.n_batches)
+    assert a.edge_busy_s == b.edge_busy_s
+    assert a.occupancy_sum == b.occupancy_sum
+    assert a.queue_sum_s == b.queue_sum_s
+
+
 # -- legacy radio regime stays bit-compatible with the RAN layer present ------
 
 def test_legacy_uplink_formula_bit_compatible(system):

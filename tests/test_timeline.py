@@ -1,0 +1,363 @@
+"""Continuous-time event engine (core/timeline.py): lock-step
+equivalence in the degenerate configuration, cross-frame backlog
+carry-over, the in-flight window / frame-skip policy, per-UE frame
+clocks, capture-anchored deadlines, and the streaming feedback loop."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.swin_t_detection import CONFIG as SWIN_FULL
+from repro.core import calibration as C
+from repro.core.adaptive import (DEFAULT_PRIVACY_PROFILE, AdaptiveController,
+                                 Objective)
+from repro.core.cell import CellSimulator
+from repro.core.channel import dupf_path
+from repro.core.pipeline import FrameSource
+from repro.core.ran import RanCell, RanConfig, make_policy
+from repro.core.splitting import SwinSplitPlan, UE_ONLY
+from repro.core.throughput import ConstantRateEstimator
+
+# per-frame quantities that must reproduce between the lock-step and the
+# degenerate event engine (rng-paired; tolerance covers absolute-clock
+# float reassociation only)
+EQUIV_FIELDS = ("delay_s", "head_s", "quant_s", "tx_s", "path_s", "tail_s",
+                "queue_s", "rate_bps", "energy_inf_j", "energy_tx_j",
+                "air_s", "prb_share")
+
+
+@pytest.fixture(scope="module")
+def system():
+    return C.calibrate()
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return SwinSplitPlan(SWIN_FULL, params=None)
+
+
+def _controller(system, level=-30.0):
+    return AdaptiveController(
+        system=system,
+        estimator=ConstantRateEstimator(system.channel.mean_rate(level)),
+        objective=Objective(w_delay=1.0, w_energy=0.0, w_privacy=0.0),
+        path=dupf_path(), privacy_profile=dict(DEFAULT_PRIVACY_PROFILE))
+
+
+def _assert_equivalent(lock, strm):
+    assert len(lock.logs) == len(strm.logs)
+    for a, b in zip(lock.logs, strm.logs):
+        assert (a.ue_id, a.frame_idx) == (b.ue_id, b.frame_idx)
+        assert a.option == b.option
+        assert a.harq_retx == b.harq_retx
+        assert a.compressed_bytes == b.compressed_bytes
+        for f in EQUIV_FIELDS:
+            va, vb = getattr(a, f), getattr(b, f)
+            assert va == pytest.approx(vb, rel=1e-9, abs=1e-12), \
+                (f, a.ue_id, a.frame_idx, va, vb)
+
+
+# -- lock-step equivalence (the acceptance anchor) ----------------------------
+
+def test_degenerate_matches_lockstep_legacy(system, plan):
+    """Uniform fps, zero jitter, unbounded window, load that drains
+    inside one frame period: the event engine replays the legacy cell's
+    per-frame delay/energy logs draw for draw."""
+    trace = np.full((4, 6), -30.0)
+    kw = dict(plan=plan, system=system, n_ues=6, seed=5,
+              execute_model=False)
+    lock = CellSimulator(**kw).run(trace, option="split2")
+    strm = CellSimulator(**kw).run_stream(trace, option="split2", fps=0.2)
+    _assert_equivalent(lock, strm)
+    # no drops, every capture detected
+    assert strm.drop_rate == 0.0
+    assert strm.stats.n_completed == 4 * 6
+
+
+def test_degenerate_matches_lockstep_ran(system, plan):
+    """Same anchor through the shared-air-interface MAC: the continuous
+    TTI clock retires the cohort exactly as serve_slot drains the slot
+    (identical HARQ stream), so grants, retransmissions and scheduled
+    rates replay."""
+    def mk():
+        return CellSimulator(
+            plan=plan, system=system, n_ues=6, seed=5, execute_model=False,
+            ran=RanCell(policy=make_policy("rr"),
+                        cfg=RanConfig(tti_s=0.005)))
+    lock = mk().run(np.full((3, 6), -40.0), option="split3")
+    strm = mk().run_stream(np.full((3, 6), -40.0), option="split3", fps=0.2)
+    _assert_equivalent(lock, strm)
+
+
+def test_degenerate_matches_lockstep_adaptive(system, plan):
+    """Per-UE controllers decide identically on both engines (per-UE
+    sensing rngs pair, grant feedback arrives before the next decide)."""
+    kw = dict(plan=plan, system=system, n_ues=4, seed=11,
+              execute_model=False, controller=_controller(system),
+              ran=RanCell(policy=make_policy("edf"),
+                          cfg=RanConfig(tti_s=0.005)))
+    trace = np.full((4, 4), -30.0)
+    lock = CellSimulator(**kw).run(trace)
+    strm = CellSimulator(**kw).run_stream(trace, fps=0.1)
+    _assert_equivalent(lock, strm)
+
+
+def test_stream_is_seed_deterministic(system, plan):
+    kw = dict(plan=plan, system=system, n_ues=8, seed=3,
+              execute_model=False)
+    fps = [0.2] * 4 + [0.4] * 4
+    args = dict(option="split3", fps=fps, jitter_s=0.05, inflight=3)
+    trace = np.full((5, 8), -30.0)
+    a = CellSimulator(**kw).run_stream(trace, **args)
+    b = CellSimulator(**kw).run_stream(trace, **args)
+    assert [(l.capture_s, l.delay_s, l.dropped) for l in a.logs] \
+        == [(l.capture_s, l.delay_s, l.dropped) for l in b.logs]
+    c = CellSimulator(**{**kw, "seed": 4}).run_stream(trace, **args)
+    assert any(x.delay_s != y.delay_s
+               for x, y in zip(a.completed_logs, c.completed_logs))
+
+
+# -- backlog carry-over --------------------------------------------------------
+
+def test_backlog_carries_over_under_load(system, plan):
+    """Sustained overload: the lock-step engine re-anchors every slot and
+    reports a flat delay profile; the event engine's per-UE queues build
+    and per-frame delay grows monotonically across frames."""
+    def mk():
+        return CellSimulator(
+            plan=plan, system=system, n_ues=6, seed=5, execute_model=False,
+            ran=RanCell(policy=make_policy("rr"),
+                        cfg=RanConfig(tti_s=0.005)))
+    trace = np.full((4, 6), -40.0)
+    lock = mk().run(trace, option="split3")
+    strm = mk().run_stream(trace, option="split3", fps=1.0)  # period << drain
+    lock_by_frame = [np.mean([l.delay_s for l in lock.logs
+                              if l.frame_idx == t]) for t in range(4)]
+    strm_by_frame = [np.mean([l.delay_s for l in strm.completed_logs
+                              if l.frame_idx == t]) for t in range(4)]
+    # lock-step: every slot looks the same (no queue to inherit)
+    assert max(lock_by_frame) - min(lock_by_frame) < 0.5 * lock_by_frame[0]
+    # event engine: each frame waits behind the previous frame's backlog
+    assert all(b > a for a, b in zip(strm_by_frame, strm_by_frame[1:]))
+    assert strm_by_frame[-1] > 1.5 * lock_by_frame[-1]
+
+
+def test_edge_busy_time_carries_over(system, plan):
+    """Edge utilization is measured against wall-clock on the event
+    engine, and stays in (0, 1]."""
+    kw = dict(plan=plan, system=system, n_ues=16, seed=0,
+              execute_model=False)
+    res = CellSimulator(**kw).run_stream(np.full((4, 16), -30.0),
+                                         option="split2", fps=0.2)
+    assert 0.0 < res.stats.edge_utilization <= 1.0
+    assert res.stats.wall_s > 0
+    assert res.stats.span_s == res.stats.wall_s
+
+
+# -- in-flight window / frame skipping ----------------------------------------
+
+def test_inflight_window_drops_frames(system, plan):
+    def mk():
+        return CellSimulator(
+            plan=plan, system=system, n_ues=8, seed=3, execute_model=False,
+            ran=RanCell(policy=make_policy("edf"),
+                        cfg=RanConfig(tti_s=0.005)))
+    over = mk().run_stream(np.full((10, 8), -20.0), option="split2",
+                           fps=2.0, inflight=2)
+    under = mk().run_stream(np.full((10, 8), -20.0), option="split2",
+                            fps=0.02, inflight=2)
+    assert over.drop_rate > 0.5 > under.drop_rate == 0.0
+    assert over.stats.n_dropped + over.stats.n_completed == 10 * 8
+    # dropped frames are flagged, carry their capture anchor, count as
+    # deadline misses, and are excluded from delay/age means
+    dropped = [l for l in over.logs if l.dropped]
+    assert dropped and all(l.deadline_miss for l in dropped)
+    assert all(l.delay_s == 0.0 for l in dropped)
+    # effective fps degrades below the capture rate under overload
+    assert 0.0 < over.stats.effective_fps < 2.0
+    assert over.stats.effective_fps < under.stats.effective_fps * 100
+
+
+def test_unbounded_window_never_drops(system, plan):
+    kw = dict(plan=plan, system=system, n_ues=8, seed=3,
+              execute_model=False)
+    res = CellSimulator(**kw).run_stream(np.full((6, 8), -20.0),
+                                         option="split2", fps=4.0)
+    assert res.drop_rate == 0.0
+    assert res.stats.n_completed == 6 * 8
+
+
+# -- per-UE frame clocks -------------------------------------------------------
+
+def test_heterogeneous_fps_and_jitter(system, plan):
+    kw = dict(plan=plan, system=system, n_ues=4, seed=7,
+              execute_model=False)
+    fps = [0.1, 0.2, 0.4, 0.8]
+    res = CellSimulator(**kw).run_stream(np.full((6, 4), -30.0),
+                                         option="split3", fps=fps)
+    for u, f in enumerate(fps):
+        caps = sorted(l.capture_s for l in res.ue_logs(u))
+        assert len(caps) == 6
+        np.testing.assert_allclose(np.diff(caps), 1.0 / f, rtol=1e-12)
+    # jitter shifts captures later but keeps them per-UE monotone
+    jit = CellSimulator(**kw).run_stream(np.full((6, 4), -30.0),
+                                         option="split3", fps=fps,
+                                         jitter_s=0.2)
+    for u in range(4):
+        caps = [l.capture_s for l in sorted(jit.ue_logs(u),
+                                            key=lambda l: l.frame_idx)]
+        base = [l.capture_s for l in sorted(res.ue_logs(u),
+                                            key=lambda l: l.frame_idx)]
+        assert all(c >= b for c, b in zip(caps, base))
+        assert all(b >= a for a, b in zip(caps, caps[1:]))
+    assert any(l.capture_s != b.capture_s
+               for l, b in zip(jit.logs, res.logs))
+
+
+def test_capture_anchored_deadlines(system, plan):
+    """The deadline is an absolute instant (capture + budget): under
+    sustained overload cross-frame lateness becomes countable, where the
+    lock-step engine (re-anchoring each slot) reports a stable miss
+    profile."""
+    def mk():
+        return CellSimulator(
+            plan=plan, system=system, n_ues=6, seed=5, execute_model=False,
+            ran=RanCell(policy=make_policy("rr"),
+                        cfg=RanConfig(tti_s=0.005)), frame_budget_s=6.0)
+    res = mk().run_stream(np.full((4, 6), -40.0), option="split3", fps=1.0)
+    for l in res.logs:
+        assert l.deadline_s == pytest.approx(l.capture_s + 6.0)
+    by_frame = [np.mean([l.deadline_miss for l in res.logs
+                         if l.frame_idx == t]) for t in range(4)]
+    assert by_frame[0] == 0.0 and by_frame[-1] == 1.0   # lateness accrues
+    lock = mk().run(np.full((4, 6), -40.0), option="split3")
+    assert lock.deadline_miss_rate == 0.0               # hidden by re-anchor
+
+
+# -- single-UE pipeline on the same engine ------------------------------------
+
+def test_single_ue_pipeline_run_stream(system):
+    from repro.core.compression import ActivationCodec
+    from repro.core.pipeline import SplitInferencePipeline
+    plan = SwinSplitPlan(SWIN_FULL, params=None)
+    pipe = SplitInferencePipeline(plan=plan, system=system,
+                                  codec=ActivationCodec(), seed=0,
+                                  execute_model=False)
+    res = pipe.run_stream(np.full(5, -30.0), option="split2", fps=0.2)
+    assert len(res.logs) == 5 and res.drop_rate == 0.0
+    # sustainable rate: delay equals the lock-step frame composition
+    lock = pipe.run_trace(None, np.full(5, -30.0), option="split2")
+    strm_sim = CellSimulator(plan=plan, system=system, n_ues=1, seed=0,
+                             execute_model=False)
+    lock_cell = strm_sim.run(np.full((5, 1), -30.0), option="split2")
+    for a, b in zip(lock_cell.logs, res.logs):
+        assert a.delay_s == pytest.approx(b.delay_s, rel=1e-9)
+    # and the single-UE stream saturates once fps outruns the pipeline
+    over = pipe.run_stream(np.full(8, -30.0), option="split2", fps=4.0,
+                           inflight=1)
+    assert over.drop_rate > 0.0
+
+
+# -- timestamps / energy ledger ------------------------------------------------
+
+def test_timestamp_monotonicity_and_age(system, plan):
+    kw = dict(plan=plan, system=system, n_ues=6, seed=2,
+              execute_model=False)
+    res = CellSimulator(**kw).run_stream(np.full((5, 6), -20.0),
+                                         option="split2", fps=1.0,
+                                         jitter_s=0.1, inflight=4)
+    for u in range(6):
+        logs = sorted(res.ue_logs(u), key=lambda l: l.frame_idx)
+        caps = [l.capture_s for l in logs]
+        assert all(b >= a for a, b in zip(caps, caps[1:]))
+    for l in res.completed_logs:
+        assert l.age_s >= l.delay_s - 1e-9   # age includes every carry-over
+        assert l.age_s == pytest.approx(l.delay_s, rel=1e-6)
+
+
+def test_ue_wall_energy_ledger(system, plan):
+    """Interval energy: at most the per-frame sum (which double-counts
+    overlapped idle), at least the active-power floor."""
+    kw = dict(plan=plan, system=system, n_ues=4, seed=2,
+              execute_model=False)
+    res = CellSimulator(**kw).run_stream(np.full((6, 4), -30.0),
+                                         option="split2", fps=1.0)
+    assert res.ue_wall_energy_j is not None and len(res.ue_wall_energy_j) == 4
+    for u in range(4):
+        logs = res.ue_logs(u)
+        per_frame = sum(l.energy_j for l in logs if not l.dropped)
+        active = sum(l.head_s + l.quant_s for l in logs if not l.dropped)
+        floor = active * system.ue.power_active_w
+        assert floor <= res.ue_wall_energy_j[u] <= per_frame * 1.5
+    assert res.stats.ue_active_s > 0
+
+
+# -- streaming feedback into the controller -----------------------------------
+
+def test_controller_backs_off_under_drops(system):
+    """A controller whose stream is dropping frames must stop picking
+    options that cannot sustain the capture rate."""
+    ctrl = AdaptiveController(
+        system=system,
+        estimator=ConstantRateEstimator(system.channel.mean_rate(-30.0)),
+        # privacy-heavy objective prefers local-only (3.84 s on the UE)
+        objective=Objective(w_delay=0.1, w_energy=0.0, w_privacy=2.0),
+        path=dupf_path(), privacy_profile=dict(DEFAULT_PRIVACY_PROFILE))
+    ctrl.frame_period_s = 1.0
+    kpm_rng = np.random.default_rng(0)
+    from repro.core.channel import iq_spectrogram, observe_kpms
+    kpm = observe_kpms(-30.0, False, kpm_rng)
+    spec = iq_spectrogram(-30.0, False, kpm_rng)
+    options = ["ue_only", "split1", "split2", "split3", "split4",
+               "server_only"]
+    calm = ctrl.decide(kpm, spec, options)
+    assert calm.option == UE_ONLY
+    assert calm.delay_s > 1.0          # the preferred option overruns 1 fps
+    for _ in range(10):
+        ctrl.observe_stream(0.0, dropped=True)
+    pressed = ctrl.decide(kpm, spec, options)
+    assert pressed.delay_s <= 1.0
+    assert pressed.option != calm.option
+    # completions decay the drop pressure back toward the calm choice
+    for _ in range(40):
+        ctrl.observe_stream(0.5, dropped=False)
+    relaxed = ctrl.decide(kpm, spec, options)
+    assert relaxed.option == UE_ONLY
+    # an unbounded window never drops, but detections aging past the
+    # backlog threshold (age_backoff periods) trigger the same back-off
+    ctrl._current = None
+    for _ in range(5):
+        ctrl.observe_stream(5.0, dropped=False)   # >> 2 x 1.0 s period
+    aged = ctrl.decide(kpm, spec, options)
+    assert aged.delay_s <= 1.0 and aged.option != UE_ONLY
+
+
+def test_frame_source_dedupes_roundrobin():
+    imgs = ["a", "b", "c"]
+    src = FrameSource(imgs)
+    # single-UE trace loop: imgs[i % len(imgs)]
+    assert [src.frame(i) for i in range(5)] \
+        == [imgs[i % 3] for i in range(5)]
+    # cell fan-out: imgs[(t + u) % len(imgs)]
+    for t in range(4):
+        for u in range(3):
+            assert src.frame(t, u) == imgs[(t + u) % 3]
+    assert FrameSource(None).frame(7, 2) is None
+
+
+def test_stream_validates_inputs(system, plan):
+    sim = CellSimulator(plan=plan, system=system, n_ues=2, seed=0,
+                        execute_model=False)
+    with pytest.raises(ValueError, match="unknown option"):
+        sim.run_stream(np.full((2, 2), -30.0), option="nope")
+    with pytest.raises(ValueError, match="fps"):
+        sim.run_stream(np.full((2, 2), -30.0), option="split1", fps=0.0)
+    with pytest.raises(ValueError, match="jitter"):
+        sim.run_stream(np.full((2, 2), -30.0), option="split1",
+                       jitter_s=-0.1)
+    with pytest.raises(ValueError, match="inflight"):
+        sim.run_stream(np.full((2, 2), -30.0), option="split1", inflight=0)
+    with pytest.raises(ValueError, match="requires imgs"):
+        CellSimulator(plan=plan, system=system, n_ues=2, seed=0,
+                      execute_model=True).run_stream(
+            np.full((2, 2), -30.0), option="split1")
