@@ -1,0 +1,190 @@
+"""Mobility sweep: UE speed x handover rate -> deadline miss, frame age,
+energy; plus the dUPF-vs-cUPF user-plane claim as a *scenario*.
+
+Every pre-mobility engine drew each UE from a stationary fading
+distribution inside one eternal cell.  This bench exercises the mobility
+subsystem (core/mobility.py) on the continuous-time event engine:
+
+  * **Speed sweep.**  UEs shuttle between an AI-RAN site (dUPF local
+    breakout) and a macro site (cUPF backhaul) 400 m apart on scripted
+    ping-pong trajectories.  Faster UEs cross the A3 boundary more often
+    -- more handovers, each costing a path-relocation gap, a flushed
+    in-flight HARQ transport block and a granted-rate estimator reset --
+    so deadline-miss rate and mean frame age rise monotonically with
+    speed.  The static point (speed 0: parked at the reference distance)
+    is asserted rng-paired BITWISE with the mobility-free engine -- the
+    sweep's baseline IS today's engine, not a lookalike.
+
+  * **dUPF vs cUPF.**  The same mobile cell is run twice with identical
+    seeds, once with the serving site's user plane at the dUPF and once
+    hauling to the central UPF: every radio draw pairs, so the delta is
+    the path alone.  The dUPF serving path must yield lower mean AND
+    lower std user-plane delay (the paper's jitter claim, Fig. 8).
+
+Acceptance anchors (asserted, persisted to results/bench_mobility.json):
+  * static point bitwise == the mobility-free engine,
+  * miss rate and mean age rise monotonically with UE speed,
+  * handover count rises with UE speed,
+  * dUPF < cUPF in both mean and std of user-plane delay, same seeds.
+
+    PYTHONPATH=src python -m benchmarks.bench_mobility
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, save
+from repro.configs.swin_t_detection import CONFIG
+from repro.core.calibration import calibrate
+from repro.core.cell import CellSimulator
+from repro.core.channel import cupf_path, dupf_path
+from repro.core.mobility import (CellSite, MobilityConfig, MobilityModel,
+                                 WaypointTrajectory, static_mobility,
+                                 two_cell_sites)
+from repro.core.ran import MultiCell, RanCell, RanConfig, make_policy
+from repro.core.splitting import SwinSplitPlan
+
+PAIRED_FIELDS = ("delay_s", "tx_s", "path_s", "rate_bps", "energy_inf_j",
+                 "energy_tx_j", "air_s", "prb_share")
+
+
+def _cells(n, tti_s):
+    return MultiCell([RanCell(policy=make_policy("edf"),
+                              cfg=RanConfig(tti_s=tti_s))
+                      for _ in range(n)])
+
+
+def _sim(system, plan, n_ues, seed, tti_s, budget_s, *, ran, mobility):
+    return CellSimulator(plan=plan, system=system, n_ues=n_ues, seed=seed,
+                         execute_model=False, frame_budget_s=budget_s,
+                         ran=ran, mobility=mobility)
+
+
+def _row(res, speed):
+    done = res.completed_logs
+    return {
+        "speed_mps": speed,
+        "deadline_miss_rate": res.deadline_miss_rate,
+        "mean_age_s": res.mean_age_s,
+        "mean_delay_s": res.mean_delay_s,
+        "n_handovers": res.stats.n_handovers,
+        "mean_ue_energy_j": (float(np.mean(res.ue_wall_energy_j))
+                             if res.ue_wall_energy_j else 0.0),
+        "mean_path_s": float(np.mean([l.path_s for l in done
+                                      if l.path_s > 0] or [0.0])),
+    }
+
+
+def run(fast: bool = False, option: str = "split3", level: float = -40.0,
+        n_ues: int = 4, budget_s: float = 4.0, seed: int = 7):
+    system = calibrate()
+    plan = SwinSplitPlan(CONFIG, params=None)
+    tti_s = 0.005
+    fps = 0.5
+    n_frames = 10 if fast else 20
+    speeds = (0.0, 5.0, 10.0, 20.0) if fast else (0.0, 2.0, 5.0, 10.0, 20.0)
+    trace = np.full((n_frames, n_ues), float(level))
+    sites = two_cell_sites(400.0)
+    mcfg = MobilityConfig(a3_ttt_s=2.0, relocation_gap_s=0.3)
+
+    table = {"config": {"option": option, "level_db": level, "n_ues": n_ues,
+                        "budget_s": budget_s, "n_frames": n_frames,
+                        "fps": fps, "tti_s": tti_s, "fast": fast,
+                        "site_spacing_m": 400.0}}
+
+    # -- static anchor: speed 0 must BE the mobility-free engine -------------
+    base = _sim(system, plan, n_ues, seed, tti_s, budget_s,
+                ran=RanCell(policy=make_policy("edf"),
+                            cfg=RanConfig(tti_s=tti_s)),
+                mobility=None).run_stream(trace, option=option, fps=fps)
+
+    print(f"  {'speed':>6s} | {'miss':>5s} {'age':>7s} {'delay':>7s} "
+          f"{'HOs':>4s} {'energy':>8s}")
+    rows = []
+    static_paired = None
+    for speed in speeds:
+        if speed == 0.0:
+            mob = static_mobility(n_ues, site=sites[0], cfg=mcfg)
+        else:
+            traj = [WaypointTrajectory(((30.0, 0.0), (370.0, 0.0)),
+                                       speed_mps=speed, loop=True)
+                    for _ in range(n_ues)]
+            mob = MobilityModel(sites, traj, mcfg)
+        res = _sim(system, plan, n_ues, seed, tti_s, budget_s,
+                   ran=_cells(len(sites), tti_s) if speed else
+                   RanCell(policy=make_policy("edf"),
+                           cfg=RanConfig(tti_s=tti_s)),
+                   mobility=mob).run_stream(trace, option=option, fps=fps)
+        if speed == 0.0:
+            static_paired = all(
+                getattr(a, f) == getattr(b, f)
+                for a, b in zip(base.logs, res.logs)
+                for f in PAIRED_FIELDS)
+        row = _row(res, speed)
+        rows.append(row)
+        table[f"speed{speed:g}"] = row
+        print(f"  {speed:6.1f} | {row['deadline_miss_rate']:5.2f} "
+              f"{row['mean_age_s']:6.2f}s {row['mean_delay_s']:6.2f}s "
+              f"{row['n_handovers']:4d} {row['mean_ue_energy_j']:7.1f}J")
+
+    # -- dUPF vs cUPF: identical seeds, the path is the only delta -----------
+    upf = {}
+    for name, path in (("dupf", dupf_path()), ("cupf", cupf_path())):
+        site = CellSite(0.0, 0.0, path, name=name)
+        traj = [WaypointTrajectory(((30.0, 0.0), (150.0, 0.0)),
+                                   speed_mps=5.0, loop=True)
+                for _ in range(n_ues)]
+        res = _sim(system, plan, n_ues, seed, tti_s, budget_s,
+                   ran=RanCell(policy=make_policy("edf"),
+                               cfg=RanConfig(tti_s=tti_s)),
+                   mobility=MobilityModel([site], traj, mcfg)
+                   ).run_stream(trace, option=option, fps=fps)
+        ps = [l.path_s for l in res.completed_logs if l.path_s > 0]
+        upf[name] = {"mean_path_s": float(np.mean(ps)),
+                     "std_path_s": float(np.std(ps)),
+                     "mean_delay_s": res.mean_delay_s}
+    table["upf"] = upf
+    print(f"  dUPF path {upf['dupf']['mean_path_s'] * 1e3:6.1f} ms "
+          f"(std {upf['dupf']['std_path_s'] * 1e3:5.1f}) vs cUPF "
+          f"{upf['cupf']['mean_path_s'] * 1e3:6.1f} ms "
+          f"(std {upf['cupf']['std_path_s'] * 1e3:5.1f}), same seeds")
+
+    # -- acceptance anchors ---------------------------------------------------
+    miss = [r["deadline_miss_rate"] for r in rows]
+    age = [r["mean_age_s"] for r in rows]
+    hos = [r["n_handovers"] for r in rows]
+    miss_ok = all(b > a for a, b in zip(miss, miss[1:]))
+    age_ok = all(b > a for a, b in zip(age, age[1:]))
+    ho_ok = (hos[0] == 0                       # static UEs never hand over
+             and all(b >= a for a, b in zip(hos, hos[1:]))
+             and hos[-1] > 0)                  # the fastest sweep point does
+    upf_ok = (upf["dupf"]["mean_path_s"] < upf["cupf"]["mean_path_s"]
+              and upf["dupf"]["std_path_s"] < upf["cupf"]["std_path_s"])
+    table["acceptance"] = {
+        "static_point_rng_paired_bitwise": bool(static_paired),
+        "miss_rises_with_speed": miss_ok,
+        "age_rises_with_speed": age_ok,
+        "handovers_rise_with_speed": ho_ok,
+        "dupf_beats_cupf_mean_and_std": upf_ok,
+    }
+    assert static_paired, \
+        "speed-0 mobility must replay the mobility-free engine bitwise"
+    assert miss_ok, f"deadline-miss must rise strictly with speed: {miss}"
+    assert age_ok, f"frame age must rise strictly with speed: {age}"
+    assert ho_ok, f"handover count must rise with speed: {hos}"
+    assert upf_ok, ("dUPF must beat cUPF in mean and std user-plane delay "
+                    f"under identical seeds: {upf}")
+
+    # fast mode gets its own results file (bench_compression convention):
+    # the CI smoke must not clobber the committed full-run curves
+    save("bench_mobility_fast" if fast else "bench_mobility", table)
+    return csv_line(
+        "mobility_handover", 0,
+        f"miss={miss[0]:.2f}->{miss[-1]:.2f};age={age[0]:.2f}->"
+        f"{age[-1]:.2f}s;hos={hos[0]}->{hos[-1]};"
+        f"dupf_path={upf['dupf']['mean_path_s'] * 1e3:.0f}ms<"
+        f"cupf={upf['cupf']['mean_path_s'] * 1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    print(run())

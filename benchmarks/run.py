@@ -27,8 +27,8 @@ def main() -> int:
     from benchmarks import (bench_adaptive, bench_cell, bench_compression,
                             bench_dupf, bench_e2e_delay,
                             bench_energy_breakdown, bench_energy_privacy,
-                            bench_estimator, bench_ran, bench_streaming,
-                            bench_tx_energy)
+                            bench_estimator, bench_mobility, bench_ran,
+                            bench_streaming, bench_tx_energy)
 
     benches = [
         # fast mode: reduced model, same legacy-vs-fused comparison + the
@@ -48,6 +48,10 @@ def main() -> int:
         # fast mode: shorter trace + coarser fps sweep, same acceptance
         # anchors (miss/drop strictly rise with load, lock-step flat)
         ("streaming_backlog", lambda: bench_streaming.run(fast=True)),
+        # fast mode: shorter trace + coarser speed sweep, same acceptance
+        # anchors (static point bitwise == today's engine, miss/age rise
+        # with speed, dUPF beats cUPF mean+std under identical seeds)
+        ("mobility_handover", lambda: bench_mobility.run(fast=True)),
     ]
     if args.only:
         benches = [(n, f) for n, f in benches if args.only in n]

@@ -19,9 +19,15 @@ overlaps uplink of frame N inside the ``--inflight`` window, congestion
 carries over between frames, and the summary adds drop rate, effective
 fps and frame age at detection.
 
+``--mobility`` shuttles the UEs between an AI-RAN (dUPF) site and a
+macro (cUPF) site on scripted trajectories (core/mobility.py): the
+channel becomes time-varying (distance path loss on the calibrated rate
+table), A3 handovers migrate byte queues between the cells' MACs on the
+absolute clock, and the per-UE table adds serving cells + handovers.
+
     PYTHONPATH=src python examples/cell_video.py [--ues 6] [--frames 12] \
         [--policy edf] [--budget 2.5] [--fps 0.5] [--jitter 0.05] \
-        [--inflight 2]
+        [--inflight 2] [--mobility --speed 8]
 """
 import argparse
 
@@ -33,8 +39,11 @@ from repro.configs.swin_t_detection import reduced
 from repro.core import ActivationCodec, SwinSplitPlan, calibrate
 from repro.core.adaptive import Objective
 from repro.core.cell import CellSimulator, cell_interference_traces
+from repro.core.mobility import (MobilityConfig, MobilityModel,
+                                 WaypointTrajectory, two_cell_sites)
 from repro.core.pipeline import build_controller
-from repro.core.ran import POLICIES, RanCell, RanConfig, make_policy
+from repro.core.ran import (POLICIES, MultiCell, RanCell, RanConfig,
+                            make_policy)
 from repro.data.video import SyntheticVideo, VideoConfig
 from repro.models import swin as SW
 
@@ -60,7 +69,17 @@ def main():
     ap.add_argument("--inflight", type=int, default=None,
                     help="max frames a UE may have in flight before it "
                          "skips a capture (needs --fps; default unbounded)")
+    ap.add_argument("--mobility", action="store_true",
+                    help="shuttle the UEs between an AI-RAN (dUPF) site "
+                         "and a macro (cUPF) site 400 m apart with A3 "
+                         "handover (core/mobility.py; needs --fps, and "
+                         "--policy for a shared MAC per cell)")
+    ap.add_argument("--speed", type=float, default=8.0,
+                    help="UE speed in m/s for --mobility trajectories")
     args = ap.parse_args()
+    if args.mobility and args.fps is None:
+        ap.error("--mobility needs --fps (handover events live on the "
+                 "event engine's absolute clock)")
 
     cfg = reduced()
     params = SW.init(cfg, jax.random.PRNGKey(0))
@@ -75,16 +94,31 @@ def main():
             system, objective=Objective(w_delay=1.0, w_energy=0.15,
                                         w_privacy=0.05))
 
+    mobility = None
+    if args.mobility:
+        sites = two_cell_sites(400.0)
+        # stagger starts so the cell's handovers spread over the run
+        mobility = MobilityModel(
+            sites,
+            [WaypointTrajectory(((30.0 + 40.0 * u, 0.0), (370.0, 0.0)),
+                                speed_mps=args.speed, loop=True)
+             for u in range(args.ues)],
+            MobilityConfig(a3_ttt_s=2.0, relocation_gap_s=0.2))
     ran = None
     if args.policy is not None:
-        ran = RanCell(policy=make_policy(args.policy),
-                      cfg=RanConfig(tti_s=0.002))
+        if args.mobility:
+            ran = MultiCell([RanCell(policy=make_policy(args.policy),
+                                     cfg=RanConfig(tti_s=0.002))
+                             for _ in range(2)])
+        else:
+            ran = RanCell(policy=make_policy(args.policy),
+                          cfg=RanConfig(tti_s=0.002))
     cell = CellSimulator(
         plan=SwinSplitPlan(cfg, params), system=system,
         codec=ActivationCodec(), controller=controller,
         n_ues=args.ues, seed=0, execute_model=True,
         batching=not args.no_batching, max_wait_s=30.0,
-        ran=ran, frame_budget_s=args.budget)
+        ran=ran, frame_budget_s=args.budget, mobility=mobility)
 
     trace = cell_interference_traces(args.frames, args.ues, seed=1)
     if args.fps is not None:
@@ -97,8 +131,9 @@ def main():
     streaming = args.fps is not None
     mac_cols = f" {'prb':>5s} {'harq':>4s} {'miss':>4s}" if ran else ""
     drop_col = f" {'drop':>4s} {'age':>7s}" if streaming else ""
+    mob_cols = f" {'cells':>5s} {'HOs':>3s}" if args.mobility else ""
     print(f"{'ue':>3s} {'frames':>6s} {'options used':24s} {'delay':>8s} "
-          f"{'queue':>7s} {'batch':>5s}{mac_cols}{drop_col}")
+          f"{'queue':>7s} {'batch':>5s}{mac_cols}{drop_col}{mob_cols}")
     for u in range(args.ues):
         logs = res.ue_logs(u)
         done = [l for l in logs if not l.dropped]
@@ -115,11 +150,17 @@ def main():
         if streaming:
             stream_cols = (f" {sum(l.dropped for l in logs):4d}"
                            f" {np.mean([l.age_s for l in done]) if done else 0.0:6.2f}s")
+        mob = ""
+        if args.mobility:
+            cells_seen = ",".join(str(c) for c in
+                                  sorted({l.serving_cell for l in logs}))
+            mob = (f" {cells_seen:>5s}"
+                   f" {max((l.handover_count for l in logs), default=0):3d}")
         print(f"{u:3d} {len(done):6d} {opts:24s} "
               f"{np.mean([l.delay_s for l in done]) if done else 0.0:7.3f}s "
               f"{np.mean([l.queue_s for l in done]) if done else 0.0:6.3f}s "
               f"{np.mean([l.batch_size for l in done]) if done else 0.0:5.1f}"
-              f"{mac}{stream_cols}")
+              f"{mac}{stream_cols}{mob}")
 
     st = res.stats
     n_det = sum(lv["cls"].shape[-1] for lv in res.outputs[-1][0]) \
@@ -140,6 +181,10 @@ def main():
         print(f"stream ({args.fps:g} fps nominal): effective "
               f"{st.effective_fps:.2f} fps, drop rate {res.drop_rate:.2f}, "
               f"mean frame age at detection {res.mean_age_s:.2f} s")
+    if args.mobility:
+        print(f"mobility ({args.speed:g} m/s): {st.n_handovers} handovers "
+              f"across the cell (dUPF site 0 <-> cUPF site 1, A3 "
+              f"hysteresis + TTT, queue migration on the absolute clock)")
 
 
 if __name__ == "__main__":

@@ -6,10 +6,16 @@ from repro.core.splitting import (SplitPlan, SwinSplitPlan, LMSplitPlan,  # noqa
                                   split_option)
 from repro.core.cell import (CellSimulator, TailBatcher, CellStats,    # noqa: F401
                              cell_interference_traces)
-from repro.core.ran import (RanCell, RanConfig, SchedulerPolicy,       # noqa: F401
-                            RoundRobinScheduler, ProportionalFairScheduler,
+from repro.core.ran import (RanCell, RanConfig, MultiCell,             # noqa: F401
+                            SchedulerPolicy, RoundRobinScheduler,
+                            ProportionalFairScheduler,
                             DeadlineEDFScheduler, make_policy,
                             jain_fairness)
+from repro.core.mobility import (MobilityModel, MobilityConfig,        # noqa: F401
+                                 CellSite, StaticTrajectory,
+                                 WaypointTrajectory,
+                                 RandomWaypointTrajectory,
+                                 static_mobility, two_cell_sites)
 from repro.core.channel import (ChannelModel, PathModel, dupf_path,    # noqa: F401
                                 cupf_path, INTERFERENCE_LEVELS)
 from repro.core.calibration import calibrate, Calibrated, PAPER        # noqa: F401

@@ -136,6 +136,17 @@ class AdaptiveController:
             self._age_ewma = (age_s if self._age_ewma == 0.0
                               else 0.7 * self._age_ewma + 0.3 * age_s)
 
+    def notify_handover(self):
+        """A handover moved this UE to a different cell (core/mobility.py):
+        the granted-rate EWMA describes the OLD cell's load and grants,
+        so trusting it on the new cell is exactly the stale-estimate
+        failure the paper's adaptive loop exists to avoid.  Drop it --
+        ``decide`` falls back to the estimator's link-rate prediction and
+        re-probes -- and clear the hysteresis hold so the first post-
+        handover decision is made from scratch rather than defended."""
+        self._granted_rate = None
+        self._current = None
+
     def relax_grant(self, link_rate_bps: float):
         """Called on frames the UE sent nothing uplink: with no grant to
         observe, the stale congestion estimate decays toward the idle link

@@ -60,7 +60,8 @@ from repro.core.adaptive import AdaptiveController, Prediction
 from repro.core.calibration import Calibrated
 from repro.core.channel import INTERFERENCE_LEVELS, PathModel, dupf_path
 from repro.core.compression import ActivationCodec
-from repro.core.ran import GrantReport, RanCell, UplinkRequest
+from repro.core.mobility import MobilityModel
+from repro.core.ran import GrantReport, MultiCell, RanCell, UplinkRequest
 from repro.core.pipeline import (EncodeResult, FrameLog, FrameSource,
                                  HeadResult, UplinkResult, account_stage,
                                  decide_stage, encode_group_stage,
@@ -197,6 +198,8 @@ class CellStats:
     wall_s: float = 0.0           # first capture -> last completion
     n_ues: int = 0
     ue_active_s: float = 0.0      # total UE compute-active wall time
+    # mobility extensions (core/mobility.py; zero without a MobilityModel)
+    n_handovers: int = 0          # serving-cell changes over the run
 
     def absorb_slot(self, records: List[BatchRecord],
                     served: Dict[int, ServedTail]):
@@ -325,13 +328,37 @@ class CellSimulator:
     # shared-air-interface MAC (core/ran.py).  None = the legacy regime:
     # every UE samples the calibrated channel independently (no
     # contention), bit-compatible with the pre-RAN pipeline numbers.
-    ran: Optional[RanCell] = None
+    # A MultiCell (2-3 RanCells) needs ``mobility`` to assign serving
+    # cells and is served by the event engine only.
+    ran: Optional[Any] = None         # RanCell | MultiCell | None
     frame_budget_s: float = 2.5       # per-frame E2E deadline (EDF urgency)
+    # trajectory-driven time-varying channel + A3 handover
+    # (core/mobility.py).  Event-engine only: handover events live on the
+    # absolute clock, so ``run``/``step`` refuse it.
+    mobility: Optional[MobilityModel] = None
     stats: CellStats = field(default_factory=CellStats)
 
     def __post_init__(self):
         self.narrowband = np.broadcast_to(
             np.asarray(self.narrowband, bool), (self.n_ues,)).copy()
+        if isinstance(self.ran, MultiCell):
+            if self.mobility is None:
+                raise ValueError(
+                    "a MultiCell RAN needs a MobilityModel to assign "
+                    "serving cells (pass mobility=..., or use one RanCell)")
+            if self.mobility.n_sites != self.ran.n_cells:
+                raise ValueError(
+                    f"MobilityModel has {self.mobility.n_sites} sites but "
+                    f"MultiCell has {self.ran.n_cells} cells; they must "
+                    f"correspond 1:1")
+        elif self.ran is not None and self.mobility is not None \
+                and self.mobility.n_sites != 1:
+            # a lone RanCell cannot host a handover target: the first A3
+            # trigger would index a stream that does not exist
+            raise ValueError(
+                f"MobilityModel has {self.mobility.n_sites} sites but the "
+                f"RAN is a single RanCell; wrap one RanCell per site in a "
+                f"MultiCell (or drop ran for isolated per-UE links)")
         self.edge = dataclasses.replace(
             self.system.edge, launch_overhead_s=self.edge_overhead_s,
             batch_sat=self.edge_batch_sat)
@@ -354,11 +381,27 @@ class CellSimulator:
         reproducible and comparisons stay rng-paired."""
         self._rng = np.random.default_rng(self.seed)          # shared channel
         # children 0..n_ues-1 are the per-UE sensing rngs exactly as before
-        # (spawn keys are index-stable); the extra child feeds HARQ draws so
-        # fading stays aligned across policies (core/ran.py discipline)
-        seqs = np.random.SeedSequence(self.seed).spawn(self.n_ues + 1)
+        # (spawn keys are index-stable, so spawning MORE children never
+        # moves an earlier stream).  Child n_ues feeds HARQ draws so fading
+        # stays aligned across policies (core/ran.py discipline); child
+        # n_ues+1 is RESERVED for the event engine's capture jitter
+        # (core/timeline.py spawns it itself); child n_ues+2 drives the
+        # mobility model's shadowing/Doppler draws; children n_ues+3.. are
+        # per-cell HARQ streams for the non-anchor cells of a MultiCell
+        # (cell 0 keeps the original HARQ stream, so a single-cell run is
+        # draw-for-draw the pre-mobility engine).
+        n_extra_cells = self.ran.n_cells - 1 \
+            if isinstance(self.ran, MultiCell) else 0
+        seqs = np.random.SeedSequence(self.seed).spawn(
+            self.n_ues + 3 + n_extra_cells)
         self._ue_rngs = [np.random.default_rng(s) for s in seqs[:self.n_ues]]
-        self._harq_rng = np.random.default_rng(seqs[-1])
+        self._harq_rng = np.random.default_rng(seqs[self.n_ues])
+        self._harq_rngs = [self._harq_rng] + [
+            np.random.default_rng(s) for s in seqs[self.n_ues + 3:]]
+        if self.mobility is not None:
+            self.mobility.reset(self.n_ues,
+                                np.random.default_rng(seqs[self.n_ues + 2]),
+                                self.system.channel)
         self._last_reports: Dict[int, GrantReport] = {}
         if self.ran is not None:
             self.ran.reset(self.n_ues)
@@ -378,6 +421,11 @@ class CellSimulator:
         """Advance every UE by one frame.  ``levels``: scalar or (n_ues,)
         interference; ``option``: fixed split for all UEs, or None to let
         each UE's cloned controller decide."""
+        if self.mobility is not None or isinstance(self.ran, MultiCell):
+            raise ValueError(
+                "mobility / multi-cell handover lives on the absolute "
+                "clock: use run_stream (core/timeline.py), not the "
+                "lock-step step/run engine")
         if option is not None and option not in self._head_s:
             raise ValueError(f"unknown option {option!r}; "
                              f"plan offers {self.plan.options}")

@@ -69,6 +69,20 @@ class ChannelModel:
         out = np.exp(np.interp(interference_db, lv, log_r))
         return float(out) if np.ndim(interference_db) == 0 else out
 
+    def db_slope(self) -> float:
+        """Fitted geometric attenuation of the rate table: mean decay of
+        ``log(rate)`` per dB of interference-equivalent loss.  The
+        mobility layer (core/mobility.py) converts excess path loss /
+        shadowing into a rate multiplier through this slope, so distance
+        degrades throughput exactly as jamming power does.  A one-point
+        table has no measurable slope; fall back to a mild default."""
+        lv = sorted(self.rate_table)
+        if len(lv) < 2:
+            return 0.05
+        return ((math.log(self.rate_table[lv[0]])
+                 - math.log(self.rate_table[lv[-1]]))
+                / (lv[-1] - lv[0]))
+
     def sample_rate(self, interference_db, rng: np.random.Generator,
                     narrowband=False):
         r = self.mean_rate(effective_level(interference_db, narrowband))
@@ -102,6 +116,24 @@ class PathModel:
         burst = rng.random(size=size) < 0.05
         tail = rng.exponential(self.jitter_s * 4, size=size)
         return lat + np.where(burst, tail, 0.0)
+
+
+def sample_path_latencies(paths: "list[PathModel]", rng: np.random.Generator,
+                          size: int) -> np.ndarray:
+    """Vectorized per-index latency draws when UEs traverse DIFFERENT
+    user-plane paths (mobility: the serving cell picks dUPF or cUPF per
+    UE, core/mobility.py).  Draws the same three shared-stream blocks as
+    ``PathModel.sample_latency(rng, size=...)`` -- one normal, one
+    uniform, one exponential per index, in that order -- and composes
+    them per path, so a run where every index happens to use the same
+    path is BITWISE the single-path call and mixed-path traces stay
+    rng-paired with uniform-path ones."""
+    base = np.array([p.base_s for p in paths], float)
+    jit = np.array([p.jitter_s for p in paths], float)
+    lat = base + np.abs(rng.normal(0.0, 1.0, size=size)) * jit
+    burst = rng.random(size=size) < 0.05
+    tail = rng.standard_exponential(size=size) * (jit * 4)
+    return lat + np.where(burst, tail, 0.0)
 
 
 def dupf_path() -> PathModel:

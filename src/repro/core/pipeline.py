@@ -86,6 +86,9 @@ class FrameLog:
     age_s: float = 0.0          # frame age at detection (completion - capture;
                                 # == delay_s when nothing carries over)
     dropped: bool = False       # skipped by the in-flight window policy
+    # mobility extensions (core/mobility.py; defaults = one eternal cell)
+    serving_cell: int = 0       # cell serving the UE at capture
+    handover_count: int = 0     # UE's cumulative handovers at capture
 
     @property
     def energy_j(self) -> float:
@@ -264,7 +267,9 @@ def account_stage(system: Calibrated, option: str, interference_db: float,
                   air_s: Optional[float] = None,
                   extra_wait_s: float = 0.0, capture_s: float = 0.0,
                   frame_idx: int = 0,
-                  age_s: Optional[float] = None) -> FrameLog:
+                  age_s: Optional[float] = None,
+                  serving_cell: int = 0,
+                  handover_count: int = 0) -> FrameLog:
     """Fold stage timings into delay + energy, paper §V style.
 
     The UE power analyzer integrates over the whole frame interval: active
@@ -303,7 +308,9 @@ def account_stage(system: Calibrated, option: str, interference_db: float,
                     prb_share=prb_share, harq_retx=harq_retx,
                     deadline_s=deadline_s, air_s=air_s,
                     frame_idx=frame_idx, capture_s=capture_s,
-                    age_s=delay_s if age_s is None else age_s)
+                    age_s=delay_s if age_s is None else age_s,
+                    serving_cell=serving_cell,
+                    handover_count=handover_count)
 
 
 # ---------------------------------------------------------------------------

@@ -43,6 +43,7 @@ and RR-vs-EDF comparisons see identical fading realizations.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence, Tuple
@@ -378,6 +379,44 @@ class RanCell:
         return reports
 
 
+@dataclass
+class MultiCell:
+    """2-3 ``RanCell``s with independent PRB grids -- the multi-cell
+    deployment the mobility layer (core/mobility.py) hands UEs across.
+    Each cell schedules its own attached UEs; a handover migrates the
+    UE's byte queue between the cells' continuous streams
+    (``RanStream.migrate_ue`` / ``adopt``).  Cell 0 is the anchor: a
+    single-cell ``MultiCell`` is exactly one ``RanCell`` and the
+    degenerate mobility configuration replays the single-cell engine
+    rng-paired (each cell's HARQ draws come from its own dedicated
+    stream, cell 0 keeping the simulator's original one).
+
+    All cells must share one ``RanConfig``: a migrated flow's grant and
+    active-slot counters span both cells, and the airtime / PRB-share
+    accounting (``timeline.deliver``, ``RanStream.report``) converts
+    them through ONE grid geometry -- heterogeneous grids would need
+    per-cell grant decomposition to bill TX energy correctly."""
+    cells: List[RanCell]
+
+    def __post_init__(self):
+        if not self.cells:
+            raise ValueError("MultiCell needs at least one RanCell")
+        for c in self.cells[1:]:
+            if c.cfg != self.cells[0].cfg:
+                raise ValueError(
+                    "MultiCell cells must share one RanConfig (grant "
+                    f"accounting spans handovers): {c.cfg} != "
+                    f"{self.cells[0].cfg}")
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.cells)
+
+    def reset(self, n_ues: int):
+        for c in self.cells:
+            c.reset(n_ues)
+
+
 # ---------------------------------------------------------------------------
 # continuous-TTI streaming MAC (core/timeline.py drives this)
 # ---------------------------------------------------------------------------
@@ -398,6 +437,11 @@ class StreamFlow:
     n_tx: int = 0
     n_retx: int = 0
     finish_s: float = float("nan")
+    # ``granted`` snapshot when the flow entered its CURRENT cell: a
+    # handover flushes an in-flight transport block only if this cell
+    # actually granted one (granted > granted_at_admit), so ping-pong
+    # handovers through an idle cell do not double-bill the same TB
+    granted_at_admit: int = 0
 
     @property
     def done(self) -> bool:
@@ -529,6 +573,44 @@ class RanStream:
         del self._cohort_open[cohort]
         self._flows = [f for f in self._flows
                        if not f.done or self._cohort_open.get(f.cohort, 0) > 0]
+
+    def migrate_ue(self, ue_id: int) -> List[StreamFlow]:
+        """Pop every unfinished flow of one UE (handover: its byte queue
+        leaves this cell).  The popped flows stop counting toward their
+        cohorts here -- a cohort whose remaining flows are all drained
+        retires exactly as if the migrated flows had finished -- so the
+        surviving UEs' HARQ draw discipline is unchanged from the TTI
+        after the migration on.  Flows come back in admission order with
+        their accumulated grant/HARQ statistics intact; the in-flight
+        transport block is the *caller's* loss to account (the target
+        cell cannot soft-combine another cell's HARQ process)."""
+        mine = [f for f in self._flows if not f.done and f.req.ue_id == ue_id]
+        mine_ids = {id(f) for f in mine}
+        for f in mine:
+            self._cohort_open[f.cohort] -= 1
+        self._flows = [f for f in self._flows if id(f) not in mine_ids]
+        for cohort in {f.cohort for f in mine}:
+            if self._cohort_open.get(cohort, 0) == 0:
+                self._retire(cohort)
+        return mine
+
+    def adopt(self, flow: StreamFlow, enqueue_s: float,
+              cohort: int) -> StreamFlow:
+        """Admit a migrated flow: remaining bytes re-enqueue here at
+        ``enqueue_s`` (handover instant + path-relocation gap), spectral
+        efficiency re-derives from THIS cell's grid, and the flow joins a
+        fresh local cohort.  Grant/HARQ counters carry over so the
+        frame's eventual ``GrantReport`` spans both cells."""
+        req = dataclasses.replace(flow.req, enqueue_s=enqueue_s)
+        nf = StreamFlow(req=req, cohort=cohort, meta=flow.meta,
+                        rem_bits=flow.rem_bits,
+                        bpp=float(self.cell.bits_per_prb(req.link_rate_bps)),
+                        granted=flow.granted, act_slots=flow.act_slots,
+                        n_tx=flow.n_tx, n_retx=flow.n_retx,
+                        granted_at_admit=flow.granted)
+        self._flows.append(nf)
+        self._cohort_open[cohort] = self._cohort_open.get(cohort, 0) + 1
+        return nf
 
     def report(self, flow: StreamFlow) -> GrantReport:
         """GrantReport for a drained flow (absolute timestamps)."""

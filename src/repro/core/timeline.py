@@ -44,6 +44,19 @@ Determinism note: batch *start* times keep the lock-step oracle
 on once it is determined at the current watermark (no future arrival
 can join) -- the skip policy therefore sees exactly the completions a
 causal batcher would have produced.
+
+**Mobility (core/mobility.py).**  With ``CellSimulator.mobility`` set,
+every capture event first advances the UE's trajectory and correlated
+shadowing/Doppler state (a dedicated rng stream; the shared fading/path
+draws never move), scales the round's shared fading draw by the serving
+cell's excess loss, and routes the path draw through the serving site's
+``PathModel``.  A3 handovers fire on this absolute clock: the UE's byte
+queue migrates between the ``MultiCell`` streams, the in-flight HARQ
+transport block is flushed as a loss, the uplink stalls for the
+relocation gap, and the controller's granted-rate estimate resets.  The
+degenerate ``static_mobility`` configuration (one cell, UEs parked at
+the reference distance, zero-sigma stochastic layers) reproduces the
+mobility-free engine bitwise -- asserted in ``tests/test_mobility.py``.
 """
 from __future__ import annotations
 
@@ -56,12 +69,13 @@ import numpy as np
 
 from repro.core.cell import (BatchRecord, CellResult, CellSimulator,
                              ServedTail, TailBatcher, TailRequest)
+from repro.core.channel import sample_path_latencies
 from repro.core.energy import interval_energy_j
 from repro.core.pipeline import (EncodeResult, FrameLog, FrameSource,
                                  HeadResult, UplinkResult, account_stage,
                                  decide_stage, encode_group_stage,
                                  sense_stage)
-from repro.core.ran import RanStream, UplinkRequest
+from repro.core.ran import MultiCell, RanStream, UplinkRequest
 from repro.core.splitting import UE_ONLY
 
 
@@ -188,6 +202,10 @@ class _Frame:
     batch_size: int = 1
     out: Any = None
     final: bool = False
+    # mobility (core/mobility.py; defaults = one eternal cell)
+    serving_cell: int = 0         # serving cell at capture
+    ho_count: int = 0             # UE's cumulative handovers at capture
+    rate_scale: float = 1.0       # mobility rate multiplier this frame
 
 
 # ---------------------------------------------------------------------------
@@ -250,12 +268,24 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
     # dedicated capture-jitter stream: children 0..n-1 are the per-UE
     # sensing rngs and child n the HARQ stream exactly as the lock-step
     # engine spawns them (SeedSequence children are index-stable), child
-    # n+1 is ours alone -- no shared-stream draws move.
+    # n+1 is ours alone -- no shared-stream draws move.  (Children n+2..
+    # belong to the mobility model and the non-anchor cells' HARQ
+    # streams; CellSimulator.reset spawns those.)
     jit_rng = np.random.default_rng(
         np.random.SeedSequence(sim.seed).spawn(n + 2)[-1])
     captures = _capture_times(n, n_frames, fps, jitter_s, jit_rng)
     src = FrameSource(imgs if sim.execute_model else None)
-    stream = RanStream(sim.ran) if sim.ran is not None else None
+    mob = sim.mobility
+    if sim.ran is None:
+        streams, harq_rngs = None, []
+    else:
+        ran_cells = sim.ran.cells if isinstance(sim.ran, MultiCell) \
+            else [sim.ran]
+        streams = [RanStream(c) for c in ran_cells]
+        # cell 0 keeps the simulator's original HARQ stream; extra cells
+        # draw from their own dedicated children (cell.py reset)
+        harq_rngs = sim._harq_rngs
+        assert len(harq_rngs) == len(streams)
     edge = EdgeQueue(sim.batcher)
     controllers = sim._controllers
     if controllers is not None:
@@ -275,6 +305,8 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
     radio_free = np.zeros(n)       # UE radio resource (legacy regime)
     active_s = np.zeros(n)         # per-UE compute-active wall time
     outcome: List[Any] = [None] * n    # last delivered grant report
+    gap_until = np.zeros(n)        # uplink stalled until (path relocation)
+    mob_obs: List[Any] = [None] * n    # latest MobilityObs per UE
     cohort = 0
 
     by_req: Dict[int, _Frame] = {}
@@ -286,22 +318,26 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
         by_req[id(req)] = fr
         edge.add(req)
 
-    def deliver(flows):
-        """MAC completions -> grant feedback + edge arrivals."""
+    def deliver(flows, strm):
+        """MAC completions -> grant feedback + edge arrivals.  ``tx_s``
+        spans from the frame's ORIGINAL encode-done instant, so a
+        migrated flow's report covers the relocation gap and both cells'
+        scheduling (the report's own enqueue re-anchors at adoption)."""
         for f in flows:
             fr: _Frame = f.meta
-            rep = stream.report(f)
-            fr.rate_bps = rep.realized_rate_bps
-            fr.tx_s = rep.tx_s
-            fr.air_s = (rep.granted_prbs * stream.cfg.tti_s
-                        / stream.cfg.n_prbs)
+            rep = strm.report(f)
+            fr.tx_s = float(rep.finish_s - fr.enq_s)
+            fr.rate_bps = (rep.n_bytes * 8.0 / fr.tx_s) if fr.tx_s > 0 \
+                else 0.0
+            fr.air_s = (rep.granted_prbs * strm.cfg.tti_s
+                        / strm.cfg.n_prbs)
             fr.prb_share = rep.prb_share
             fr.harq_retx = rep.n_harq_retx
             fr.arrival_s = rep.finish_s + fr.path_s
             assert fr.arrival_s >= fr.enq_s - 1e-9, "uplink went backwards"
             outcome[fr.ue] = rep
             if controllers is not None:
-                controllers[fr.ue].observe_grant(rep.realized_rate_bps)
+                controllers[fr.ue].observe_grant(fr.rate_bps)
             submit(fr)
 
     def serve(batches):
@@ -335,15 +371,46 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
             group.append((events[i][2], events[i][1]))   # (ue, frame idx)
             i += 1
         group.sort()
-        # 1. advance the MAC and the edge to the capture instant, so the
+        # 1. advance the MACs and the edge to the capture instant, so the
         #    in-flight window sees every completion up to now
-        if stream is not None:
-            deliver(stream.advance(t, sim._harq_rng))
+        if streams is not None:
+            for s, hr in zip(streams, harq_rngs):
+                deliver(s.advance(t, hr), s)
         serve(edge.flush(t))
+
+        # 1b. mobility: advance trajectories/shadowing to the capture
+        #     instant and evaluate A3 (handover events live on THIS
+        #     absolute clock).  On handover the UE's byte queue migrates
+        #     to the target cell's MAC, the in-flight HARQ transport
+        #     block is flushed as a loss, the uplink stalls for the
+        #     path-relocation gap, and the controller's granted-rate
+        #     estimate resets (it described the OLD cell's load).
+        if mob is not None:
+            for u, _k in group:
+                obs = mob.observe(u, t)
+                mob_obs[u] = obs
+                ev = obs.handover
+                if ev is None:
+                    continue
+                gap_until[u] = ev.t_s + ev.gap_s
+                if streams is not None:
+                    for fl in streams[ev.from_cell].migrate_ue(u):
+                        if fl.granted > fl.granted_at_admit:
+                            fl.n_retx += 1   # in-flight TB lost at HO
+                        streams[ev.to_cell].adopt(
+                            fl, max(fl.req.enqueue_s, gap_until[u]),
+                            cohort)
+                else:
+                    radio_free[u] = max(radio_free[u], gap_until[u])
+                outcome[u] = None            # old cell's grants are stale
+                if controllers is not None:
+                    controllers[u].notify_handover()
 
         # 2. admission: skip when the in-flight window is full
         admitted: List[_Frame] = []
         for u, k in group:
+            serv = int(mob.serving[u]) if mob is not None else 0
+            hoc = int(mob.handover_count[u]) if mob is not None else 0
             n_done = sum(1 for d in done_times[u] if d <= t + 1e-12)
             if launched[u] - n_done >= window:
                 log = FrameLog(
@@ -352,16 +419,19 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
                     path_s=0.0, tail_s=0.0, energy_inf_j=0.0,
                     energy_tx_j=0.0, raw_bytes=0, compressed_bytes=0,
                     rate_bps=0.0, ue_id=u, deadline_s=t + budget,
-                    frame_idx=k, capture_s=t, age_s=0.0, dropped=True)
+                    frame_idx=k, capture_s=t, age_s=0.0, dropped=True,
+                    serving_cell=serv, handover_count=hoc)
                 dropped_logs.append(log)
                 sim.stats.n_dropped += 1
                 if controllers is not None:
                     controllers[u].observe_stream(0.0, True)
                 continue
             launched[u] += 1
-            admitted.append(_Frame(ue=u, idx=k, capture_s=t,
-                                   level=float(levels[k, u]),
-                                   deadline_s=t + budget))
+            admitted.append(_Frame(
+                ue=u, idx=k, capture_s=t, level=float(levels[k, u]),
+                deadline_s=t + budget, serving_cell=serv, ho_count=hoc,
+                rate_scale=(mob_obs[u].rate_scale if mob is not None
+                            else 1.0)))
         if not admitted:
             continue
 
@@ -377,8 +447,11 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
                     sim._ue_rngs[fr.ue],
                     grant_share=None if rep is None else rep.prb_share,
                     buffer_bytes=None if rep is None else float(rep.n_bytes))
-                fr.pred = decide_stage(controllers[fr.ue], kpm, spec,
-                                       sim.plan.options, fr.level, sim.path)
+                fr.pred = decide_stage(
+                    controllers[fr.ue], kpm, spec, sim.plan.options,
+                    fr.level,
+                    mob.serving_path(fr.ue) if mob is not None
+                    else sim.path)
                 fr.option = fr.pred.option
             else:
                 fr.option = option
@@ -420,19 +493,30 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
 
         # 5. uplink -- one vectorized fading draw + one vectorized path
         #    draw over the round, the lock-step slot's exact shared-rng
-        #    discipline
+        #    discipline.  Mobility scales the SAME shared fading draw by
+        #    the serving cell's excess loss (scale 1 at the reference
+        #    geometry keeps the draw bitwise) and routes the path draw
+        #    through each UE's serving site, composed from the identical
+        #    shared-stream blocks (sample_path_latencies).
         lv = np.array([fr.level for fr in admitted])
         nb = np.array([sim.narrowband[fr.ue] for fr in admitted])
         link = sim.system.channel.sample_rate(lv, sim._rng, narrowband=nb)
         link = np.atleast_1d(np.asarray(link, float))
         offload = np.array([fr.offload for fr in admitted])
         m = len(admitted)
-        path = np.where(offload,
-                        sim.path.sample_latency(sim._rng, size=m), 0.0)
+        if mob is not None:
+            scale = np.array([fr.rate_scale for fr in admitted])
+            link = np.maximum(link * scale, sim.system.channel.min_rate)
+            ppaths = [mob.sites[fr.serving_cell].path for fr in admitted]
+            path = np.where(offload,
+                            sample_path_latencies(ppaths, sim._rng, m), 0.0)
+        else:
+            path = np.where(offload,
+                            sim.path.sample_latency(sim._rng, size=m), 0.0)
         for j, fr in enumerate(admitted):
             fr.rate_bps = float(link[j])
             fr.path_s = float(path[j])
-        if stream is None:
+        if streams is None:
             # per-UE serial radio: frame N+1's transmission queues behind
             # frame N's -- the isolated link's cross-frame carry-over
             for fr in admitted:
@@ -449,11 +533,13 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
         else:
             for j, fr in enumerate(admitted):
                 if fr.offload and fr.enc.compressed_bytes > 0:
-                    stream.enqueue(
+                    streams[fr.serving_cell].enqueue(
                         UplinkRequest(
                             ue_id=fr.ue,
                             n_bytes=int(fr.enc.compressed_bytes),
-                            enqueue_s=fr.enq_s, deadline_s=fr.deadline_s,
+                            enqueue_s=max(fr.enq_s,
+                                          float(gap_until[fr.ue])),
+                            deadline_s=fr.deadline_s,
                             link_rate_bps=fr.rate_bps),
                         cohort, meta=fr)
                     continue
@@ -478,8 +564,9 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
         frames.extend(admitted)
 
     # drain: whatever is still in the air or queued at the edge
-    if stream is not None:
-        deliver(stream.advance(math.inf, sim._harq_rng))
+    if streams is not None:
+        for s, hr in zip(streams, harq_rngs):
+            deliver(s.advance(math.inf, hr), s)
     serve(edge.flush(math.inf))
     assert edge.n_pending == 0 and all(fr.final for fr in frames), \
         "event engine ended with unfinished frames"
@@ -497,7 +584,8 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
             harq_retx=fr.harq_retx, deadline_s=fr.deadline_s,
             air_s=fr.air_s, extra_wait_s=fr.pre_wait_s,
             capture_s=fr.capture_s, frame_idx=fr.idx,
-            age_s=fr.done_s - fr.capture_s))
+            age_s=fr.done_s - fr.capture_s,
+            serving_cell=fr.serving_cell, handover_count=fr.ho_count))
     logs.extend(dropped_logs)
     logs.sort(key=lambda l: (l.frame_idx, l.ue_id))
 
@@ -514,6 +602,7 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
     st.wall_s = max(last_done, last_capture) - first_capture
     st.span_s = st.wall_s          # utilization measured against wall-clock
     st.ue_active_s = float(active_s.sum())
+    st.n_handovers = int(mob.handover_count.sum()) if mob is not None else 0
 
     # per-UE wall-clock energy: active intervals at P_active, the rest of
     # the UE's span idle, radio charged per granted airtime (no

@@ -278,6 +278,103 @@ def test_cellstats_absorb_batch_matches_slot_totals(system):
     assert a.queue_sum_s == b.queue_sum_s
 
 
+def test_interval_energy_edge_cases():
+    """interval_energy_j (core/energy.py): zero-length runs, pure idle,
+    and pipelined intervals where active time exceeds the wall span (the
+    overlap case the per-frame accounting double-counts) -- idle clamps
+    at zero, energy never goes negative."""
+    from repro.core.energy import DeviceProfile, interval_energy_j
+    p = DeviceProfile(name="ue", flops_per_s=1e12, power_active_w=30.0,
+                      power_idle_w=2.0)
+    assert interval_energy_j(p, 0.0, 0.0) == 0.0          # zero-length run
+    assert interval_energy_j(p, 0.0, 5.0) == 2.0 * 5.0    # pure idle
+    assert interval_energy_j(p, 3.0, 3.0) == 30.0 * 3.0   # wall fully active
+    # overlapping intervals: the idle remainder clamps at zero
+    assert interval_energy_j(p, 4.0, 3.0) == 30.0 * 4.0
+    # monotone in both arguments
+    assert interval_energy_j(p, 1.0, 10.0) < interval_energy_j(p, 2.0, 10.0)
+    assert interval_energy_j(p, 1.0, 10.0) < interval_energy_j(p, 1.0, 20.0)
+
+
+def _mk_log(ue, frame, dropped, delay_s=0.5, age_s=0.5, capture_s=0.0,
+            deadline_s=float("inf")):
+    from repro.core.pipeline import FrameLog
+    return FrameLog(option="dropped" if dropped else "split2",
+                    interference_db=-30.0,
+                    delay_s=0.0 if dropped else delay_s,
+                    head_s=0.1, quant_s=0.01, tx_s=0.1, path_s=0.01,
+                    tail_s=0.05, energy_inf_j=0.0 if dropped else 1.0,
+                    energy_tx_j=0.0, raw_bytes=0, compressed_bytes=0,
+                    rate_bps=1e7, ue_id=ue, frame_idx=frame,
+                    capture_s=capture_s, deadline_s=deadline_s,
+                    age_s=0.0 if dropped else age_s, dropped=dropped)
+
+
+def test_cellresult_accounting_when_all_frames_of_a_ue_drop():
+    """A UE whose every capture was skipped: its logs are all dropped,
+    every dropped frame counts as a deadline miss, and the cell-level
+    delay/age means exclude it instead of averaging zeros in."""
+    from repro.core.cell import CellResult, CellStats
+    logs = ([_mk_log(0, k, dropped=False, delay_s=0.4, age_s=0.6)
+             for k in range(3)]
+            + [_mk_log(1, k, dropped=True, deadline_s=2.0)
+               for k in range(3)])
+    st = CellStats(n_completed=3, n_dropped=3, age_sum_s=1.8,
+                   wall_s=3.0, n_ues=2)
+    res = CellResult(logs=logs, stats=st)
+    assert [l.dropped for l in res.ue_logs(1)] == [True] * 3
+    assert res.drop_rate == 0.5
+    assert res.mean_delay_s == pytest.approx(0.4)   # zeros NOT averaged in
+    assert res.mean_age_s == pytest.approx(0.6)
+    # dropped frames are misses even with a finite deadline in the future
+    assert res.deadline_miss_rate == pytest.approx(0.5)
+    assert st.drop_rate == 0.5
+    assert st.mean_age_s == pytest.approx(0.6)
+    assert st.effective_fps == pytest.approx(3 / 3.0 / 2)
+
+
+def test_cellstats_all_dropped_accounting():
+    """Degenerate streaming stats: nothing ever completed.  Every mean
+    stays defined (zero), drop rate saturates at 1."""
+    from repro.core.cell import CellResult, CellStats
+    st = CellStats(n_completed=0, n_dropped=5, n_ues=1, wall_s=0.0)
+    assert st.drop_rate == 1.0
+    assert st.mean_age_s == 0.0
+    assert st.effective_fps == 0.0
+    res = CellResult(logs=[_mk_log(0, k, dropped=True) for k in range(5)],
+                     stats=st)
+    assert res.completed_logs == []
+    assert res.mean_delay_s == 0.0 and res.mean_age_s == 0.0
+    assert res.drop_rate == 1.0 and res.deadline_miss_rate == 1.0
+
+
+def test_stream_per_ue_drop_accounting(system):
+    """Driven through the event engine: per-UE dropped + completed
+    always re-total the offered captures, and a UE's age mean comes from
+    its completions only."""
+    plan = SwinSplitPlan(SWIN_FULL, params=None)
+    from repro.core.ran import RanCell, RanConfig, make_policy
+    sim = CellSimulator(plan=plan, system=system, n_ues=4, seed=3,
+                        execute_model=False,
+                        ran=RanCell(policy=make_policy("edf"),
+                                    cfg=RanConfig(tti_s=0.005)))
+    res = sim.run_stream(np.full((8, 4), -10.0), option="split2",
+                         fps=2.0, inflight=1)
+    assert res.stats.n_dropped > 0
+    for u in range(4):
+        logs = res.ue_logs(u)
+        assert len(logs) == 8
+        done = [l for l in logs if not l.dropped]
+        assert len(done) + sum(l.dropped for l in logs) == 8
+        if done:
+            ages = [l.age_s for l in done]
+            assert np.mean(ages) > 0.0
+        # energy of dropped frames is zero (no head ran, no TX)
+        for l in logs:
+            if l.dropped:
+                assert l.energy_j == 0.0 and l.delay_s == 0.0
+
+
 # -- legacy radio regime stays bit-compatible with the RAN layer present ------
 
 def test_legacy_uplink_formula_bit_compatible(system):

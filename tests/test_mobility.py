@@ -1,0 +1,394 @@
+"""Mobility subsystem (core/mobility.py): trajectories, the
+rate-table-layered time-varying channel, A3 handover with queue
+migration / HARQ flush / path relocation, and the acceptance anchor --
+the static-trajectory single-cell configuration reproduces the PR-4
+streaming engine rng-paired (bitwise)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.swin_t_detection import CONFIG as SWIN_FULL
+from repro.core import calibration as C
+from repro.core.adaptive import (DEFAULT_PRIVACY_PROFILE, AdaptiveController,
+                                 Objective)
+from repro.core.cell import CellSimulator
+from repro.core.channel import (PathModel, cupf_path, dupf_path,
+                                sample_path_latencies)
+from repro.core.mobility import (CellSite, HandoverEvent, MobilityConfig,
+                                 MobilityModel, RandomWaypointTrajectory,
+                                 StaticTrajectory, WaypointTrajectory,
+                                 static_mobility, two_cell_sites)
+from repro.core.ran import MultiCell, RanCell, RanConfig, make_policy
+from repro.core.splitting import SwinSplitPlan
+from repro.core.throughput import ConstantRateEstimator
+
+# every per-frame field that must replay bitwise between the mobility-
+# free engine and the degenerate (static, single-cell, zero-sigma)
+# mobility configuration
+EXACT_FIELDS = ("delay_s", "head_s", "quant_s", "tx_s", "path_s", "tail_s",
+                "queue_s", "rate_bps", "energy_inf_j", "energy_tx_j",
+                "air_s", "prb_share", "capture_s", "age_s")
+
+
+@pytest.fixture(scope="module")
+def system():
+    return C.calibrate()
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return SwinSplitPlan(SWIN_FULL, params=None)
+
+
+def _controller(system, level=-30.0):
+    return AdaptiveController(
+        system=system,
+        estimator=ConstantRateEstimator(system.channel.mean_rate(level)),
+        objective=Objective(w_delay=1.0, w_energy=0.0, w_privacy=0.0),
+        path=dupf_path(), privacy_profile=dict(DEFAULT_PRIVACY_PROFILE))
+
+
+def _assert_bitwise(base, mobi):
+    assert len(base.logs) == len(mobi.logs)
+    for a, b in zip(base.logs, mobi.logs):
+        assert (a.ue_id, a.frame_idx, a.option, a.dropped) == \
+            (b.ue_id, b.frame_idx, b.option, b.dropped)
+        for f in EXACT_FIELDS:
+            assert getattr(a, f) == getattr(b, f), \
+                (f, a.ue_id, a.frame_idx, getattr(a, f), getattr(b, f))
+        assert b.serving_cell == 0 and b.handover_count == 0
+
+
+# -- trajectories --------------------------------------------------------------
+
+def test_static_trajectory():
+    tr = StaticTrajectory(3.0, -4.0)
+    assert tr.position(0.0) == tr.position(1e6) == (3.0, -4.0)
+
+
+def test_waypoint_trajectory_interpolates_and_parks():
+    tr = WaypointTrajectory(((0.0, 0.0), (10.0, 0.0), (10.0, 5.0)),
+                            speed_mps=1.0)
+    assert tr.position(0.0) == (0.0, 0.0)
+    assert tr.position(4.0) == (4.0, 0.0)
+    assert tr.position(12.0) == (10.0, 2.0)
+    assert tr.position(100.0) == (10.0, 5.0)      # parks at the end
+
+
+def test_waypoint_trajectory_loops_ping_pong():
+    tr = WaypointTrajectory(((0.0, 0.0), (10.0, 0.0)), speed_mps=1.0,
+                            loop=True)
+    assert tr.position(5.0) == (5.0, 0.0)
+    assert tr.position(15.0) == (5.0, 0.0)        # heading back
+    assert tr.position(25.0) == (5.0, 0.0)        # and forth again
+    assert tr.position(10.0) == (10.0, 0.0)
+
+
+def test_waypoint_trajectory_validates():
+    with pytest.raises(ValueError, match="at least one point"):
+        WaypointTrajectory((), speed_mps=1.0)
+    with pytest.raises(ValueError, match="non-negative"):
+        WaypointTrajectory(((0.0, 0.0),), speed_mps=-1.0)
+
+
+def test_random_waypoint_deterministic_and_bounded():
+    area = (0.0, 0.0, 100.0, 50.0)
+    a = RandomWaypointTrajectory(area, (1.0, 5.0), pause_s=2.0, seed=9)
+    b = RandomWaypointTrajectory(area, (1.0, 5.0), pause_s=2.0, seed=9)
+    ts = np.linspace(0.0, 300.0, 61)
+    pa = [a.position(t) for t in ts]
+    assert pa == [b.position(t) for t in ts]      # same seed, same path
+    for x, y in pa:
+        assert 0.0 <= x <= 100.0 and 0.0 <= y <= 50.0
+    c = RandomWaypointTrajectory(area, (1.0, 5.0), pause_s=2.0, seed=10)
+    assert any(p != q for p, q in zip(pa, (c.position(t) for t in ts)))
+    with pytest.raises(ValueError, match="v_max > 0"):
+        RandomWaypointTrajectory(area, (0.0, 0.0))
+
+
+# -- the rate-table-layered channel -------------------------------------------
+
+def test_db_slope_matches_table_endpoints(system):
+    ch = system.channel
+    lv = sorted(ch.rate_table)
+    k = ch.db_slope()
+    assert k > 0
+    expect = (math.log(ch.rate_table[lv[0]])
+              - math.log(ch.rate_table[lv[-1]])) / (lv[-1] - lv[0])
+    assert k == pytest.approx(expect)
+
+
+def test_rate_scale_degrades_geometrically_with_distance(system):
+    """Farther from the site -> larger interference-equivalent excess ->
+    geometrically smaller rate multiplier; at the reference distance the
+    multiplier is exactly 1 (Fig. 4 fit intact)."""
+    mob = MobilityModel([CellSite(0.0, 0.0)],
+                        [StaticTrajectory(30.0, 0.0)])
+    mob.reset(1, np.random.default_rng(0), system.channel)
+    assert mob.rate_scale(0.0) == 1.0
+    scales = [mob.rate_scale(mob._pathloss_db(d)) for d in (30, 60, 120, 240)]
+    assert scales[0] == pytest.approx(1.0)
+    assert all(b < a for a, b in zip(scales, scales[1:]))
+    # doubling the distance costs the same factor every time (log-linear)
+    r1, r2 = scales[1] / scales[0], scales[2] / scales[1]
+    assert r1 == pytest.approx(r2, rel=1e-9)
+
+
+def test_shadowing_is_spatially_correlated(system):
+    """Consecutive observations a short hop apart stay correlated;
+    a teleport across many decorrelation lengths forgets the field."""
+    cfg = MobilityConfig(shadow_sigma_db=6.0, shadow_decorr_m=50.0)
+    short, jump = [], []
+    for seed in range(40):
+        for moved, out in ((2.0, short), (5000.0, jump)):
+            m = MobilityModel([CellSite(0.0, 0.0)],
+                              [WaypointTrajectory(
+                                  ((30.0, 0.0), (30.0 + moved, 0.0)),
+                                  speed_mps=moved)], cfg)
+            m.reset(1, np.random.default_rng(seed), system.channel)
+            s0 = float(m._shadow[0, 0])
+            m.observe(0, 1.0)
+            out.append((s0, float(m._shadow[0, 0])))
+    corr_short = np.corrcoef(np.array(short).T)[0, 1]
+    corr_jump = np.corrcoef(np.array(jump).T)[0, 1]
+    assert corr_short > 0.9 > abs(corr_jump) + 0.6
+
+
+def test_observation_draw_count_is_config_independent(system, plan):
+    """Turning the stochastic layers on must not move the SHARED streams:
+    path-jitter draws stay bitwise identical between a zero-sigma and a
+    shadowed run (mobility draws from its own dedicated child)."""
+    kw = dict(plan=plan, system=system, n_ues=4, seed=5,
+              execute_model=False)
+    trace = np.full((4, 4), -30.0)
+
+    def mk(cfg):
+        traj = [WaypointTrajectory(((60.0, 0.0), (160.0, 0.0)),
+                                   speed_mps=5.0) for _ in range(4)]
+        return CellSimulator(**kw, mobility=MobilityModel(
+            [CellSite(0.0, 0.0)], traj, cfg))
+    quiet = mk(MobilityConfig()).run_stream(trace, option="split2", fps=0.2)
+    noisy = mk(MobilityConfig(shadow_sigma_db=8.0, doppler_sigma_db=3.0)
+               ).run_stream(trace, option="split2", fps=0.2)
+    assert [l.path_s for l in quiet.logs] == [l.path_s for l in noisy.logs]
+    # the stochastic layers DO move the rates (through the dedicated rng)
+    assert any(a.rate_bps != b.rate_bps
+               for a, b in zip(quiet.logs, noisy.logs))
+
+
+def test_sample_path_latencies_matches_single_path():
+    """The mixed-path helper composed from the same shared-stream blocks
+    is BITWISE the single-path vectorized call when all paths agree."""
+    for p in (dupf_path(), cupf_path()):
+        a = p.sample_latency(np.random.default_rng(3), size=64)
+        b = sample_path_latencies([p] * 64, np.random.default_rng(3), 64)
+        assert np.array_equal(a, b)
+
+
+# -- the acceptance anchor: degenerate replay ---------------------------------
+
+def test_static_single_cell_reproduces_streaming_legacy(system, plan):
+    """Static trajectories at the reference distance, one cell,
+    zero-sigma stochastic layers: the mobility engine replays the PR-4
+    streaming engine's per-frame logs BITWISE (rng-paired)."""
+    kw = dict(plan=plan, system=system, n_ues=6, seed=5,
+              execute_model=False)
+    trace = np.full((4, 6), -30.0)
+    base = CellSimulator(**kw).run_stream(trace, option="split2", fps=0.2)
+    mobi = CellSimulator(**kw, mobility=static_mobility(6)).run_stream(
+        trace, option="split2", fps=0.2)
+    _assert_bitwise(base, mobi)
+    assert mobi.stats.n_handovers == 0
+
+
+def test_static_single_cell_reproduces_streaming_ran(system, plan):
+    """Same anchor through the shared-air-interface MAC: identical grant
+    trace, HARQ stream and scheduled rates."""
+    def mk(**extra):
+        return CellSimulator(
+            plan=plan, system=system, n_ues=6, seed=5, execute_model=False,
+            ran=RanCell(policy=make_policy("rr"),
+                        cfg=RanConfig(tti_s=0.005)), **extra)
+    trace = np.full((3, 6), -40.0)
+    base = mk().run_stream(trace, option="split3", fps=0.2)
+    mobi = mk(mobility=static_mobility(6)).run_stream(
+        trace, option="split3", fps=0.2)
+    _assert_bitwise(base, mobi)
+    for a, b in zip(base.logs, mobi.logs):
+        assert a.harq_retx == b.harq_retx
+
+
+def test_static_single_cell_reproduces_streaming_adaptive(system, plan):
+    """Per-UE controllers decide identically: the degenerate serving path
+    equals the simulator's path, grant feedback pairs, and no handover
+    ever resets an estimator."""
+    kw = dict(plan=plan, system=system, n_ues=4, seed=11,
+              execute_model=False, controller=_controller(system),
+              ran=RanCell(policy=make_policy("edf"),
+                          cfg=RanConfig(tti_s=0.005)))
+    trace = np.full((4, 4), -30.0)
+    base = CellSimulator(**kw).run_stream(trace, fps=0.1)
+    mobi = CellSimulator(**kw, mobility=static_mobility(4)).run_stream(
+        trace, fps=0.1)
+    _assert_bitwise(base, mobi)
+
+
+def test_multicell_idle_neighbor_is_a_noop(system, plan):
+    """A second cell nobody attaches to never draws from its HARQ stream:
+    static UEs on cell 0 of a two-cell deployment replay the single-cell
+    run bitwise."""
+    def mk(ran, mobility):
+        return CellSimulator(
+            plan=plan, system=system, n_ues=4, seed=7, execute_model=False,
+            ran=ran, mobility=mobility)
+    trace = np.full((3, 4), -30.0)
+    single = mk(RanCell(policy=make_policy("rr"),
+                        cfg=RanConfig(tti_s=0.005)),
+                static_mobility(4)).run_stream(trace, option="split3",
+                                               fps=0.2)
+    sites = [CellSite(0.0, 0.0, dupf_path()),
+             CellSite(5000.0, 0.0, cupf_path())]
+    cfg = MobilityConfig()
+    mob = MobilityModel(sites, [StaticTrajectory(cfg.ref_dist_m, 0.0)] * 4,
+                        cfg)
+    multi = mk(MultiCell([RanCell(policy=make_policy("rr"),
+                                  cfg=RanConfig(tti_s=0.005))
+                          for _ in range(2)]),
+               mob).run_stream(trace, option="split3", fps=0.2)
+    _assert_bitwise(single, multi)
+
+
+# -- handover mechanics --------------------------------------------------------
+
+def _crossing_cell(system, plan, *, speed=10.0, n_ues=3, seed=3,
+                   ttt=2.0, gap=0.2, policy="edf", budget=6.0):
+    sites = two_cell_sites(400.0)
+    traj = [WaypointTrajectory(((30.0, 0.0), (370.0, 0.0)),
+                               speed_mps=speed, loop=True)
+            for _ in range(n_ues)]
+    mob = MobilityModel(sites, traj,
+                        MobilityConfig(a3_ttt_s=ttt, relocation_gap_s=gap))
+    cells = MultiCell([RanCell(policy=make_policy(policy),
+                               cfg=RanConfig(tti_s=0.005))
+                       for _ in sites])
+    return CellSimulator(plan=plan, system=system, n_ues=n_ues, seed=seed,
+                         execute_model=False, ran=cells, mobility=mob,
+                         frame_budget_s=budget)
+
+
+def test_a3_handover_fires_and_logs(system, plan):
+    sim = _crossing_cell(system, plan)
+    res = sim.run_stream(np.full((24, 3), -40.0), option="split3", fps=0.5)
+    assert res.stats.n_handovers > 0
+    assert {l.serving_cell for l in res.logs} == {0, 1}
+    # cumulative handover counts are per-UE non-decreasing in capture order
+    for u in range(3):
+        hc = [l.handover_count for l in
+              sorted(res.ue_logs(u), key=lambda l: l.frame_idx)]
+        assert all(b >= a for a, b in zip(hc, hc[1:]))
+        assert hc[-1] > 0
+    # runs are seed-deterministic
+    res2 = _crossing_cell(system, plan).run_stream(
+        np.full((24, 3), -40.0), option="split3", fps=0.5)
+    assert [(l.serving_cell, l.delay_s) for l in res.logs] \
+        == [(l.serving_cell, l.delay_s) for l in res2.logs]
+
+
+def test_a3_hysteresis_and_ttt_gate_the_trigger(system, plan):
+    """With an enormous hysteresis no crossing ever hands over; with an
+    enormous time-to-trigger neither does a brief excursion."""
+    for cfg_kw in (dict(a3_hysteresis_db=200.0),
+                   dict(a3_ttt_s=1e6)):
+        sites = two_cell_sites(400.0)
+        traj = [WaypointTrajectory(((30.0, 0.0), (370.0, 0.0)),
+                                   speed_mps=10.0, loop=True)]
+        mob = MobilityModel(sites, traj, MobilityConfig(**cfg_kw))
+        cells = MultiCell([RanCell(policy=make_policy("rr"),
+                                   cfg=RanConfig(tti_s=0.005))
+                           for _ in sites])
+        sim = CellSimulator(plan=plan, system=system, n_ues=1, seed=0,
+                            execute_model=False, ran=cells, mobility=mob)
+        res = sim.run_stream(np.full((16, 1), -30.0), option="split3",
+                             fps=0.5)
+        assert res.stats.n_handovers == 0
+        assert all(l.serving_cell == 0 for l in res.logs)
+
+
+def test_handover_migrates_queue_and_completes_all_frames(system, plan):
+    """Under load heavy enough that payloads are in flight at handover,
+    every admitted frame still completes (the byte queue migrated, no
+    frame was lost in the MAC) and the relocation gap shows up as extra
+    uplink latency on the frames it stalled."""
+    sim = _crossing_cell(system, plan, speed=20.0, gap=0.5)
+    res = sim.run_stream(np.full((24, 3), -40.0), option="split3", fps=1.0)
+    assert res.stats.n_handovers > 0
+    assert res.stats.n_completed + res.stats.n_dropped == 24 * 3
+    assert res.stats.n_dropped == 0          # unbounded window: no drops
+    done = res.completed_logs
+    assert all(l.tx_s >= 0.0 for l in done)
+    assert all(not math.isnan(l.delay_s) for l in done)
+
+
+def test_handover_resets_controller_grant_estimate(system):
+    ctrl = _controller(system)
+    ctrl.observe_grant(1e6)
+    ctrl._current = "split3"
+    assert ctrl._granted_rate is not None
+    ctrl.notify_handover()
+    assert ctrl._granted_rate is None and ctrl._current is None
+
+
+def test_serving_path_switches_dupf_to_cupf(system, plan):
+    """The user-plane path follows the serving cell: frames served by the
+    AI-RAN site see dUPF-scale path latency, frames served by the macro
+    site see the cUPF backhaul -- the dUPF-reduces-jitter claim becomes
+    a scenario."""
+    sim = _crossing_cell(system, plan, n_ues=2)
+    res = sim.run_stream(np.full((24, 2), -40.0), option="split3", fps=0.5)
+    by_cell = {c: [l.path_s for l in res.completed_logs
+                   if l.serving_cell == c and l.path_s > 0]
+               for c in (0, 1)}
+    assert by_cell[0] and by_cell[1]
+    assert np.mean(by_cell[0]) < np.mean(by_cell[1])
+    # dUPF's base one-way latency vs the emulated backhaul's (channel.py)
+    assert np.mean(by_cell[0]) < 0.05 < np.mean(by_cell[1])
+
+
+def test_mobility_requires_event_engine(system, plan):
+    sim = CellSimulator(plan=plan, system=system, n_ues=2, seed=0,
+                        execute_model=False, mobility=static_mobility(2))
+    with pytest.raises(ValueError, match="run_stream"):
+        sim.run(np.full((2, 2), -30.0), option="split2")
+
+
+def test_multicell_validation(system, plan):
+    cells = MultiCell([RanCell(policy=make_policy("rr")) for _ in range(2)])
+    with pytest.raises(ValueError, match="MobilityModel"):
+        CellSimulator(plan=plan, system=system, n_ues=2, seed=0,
+                      execute_model=False, ran=cells)
+    with pytest.raises(ValueError, match="1:1"):
+        CellSimulator(plan=plan, system=system, n_ues=2, seed=0,
+                      execute_model=False, ran=cells,
+                      mobility=static_mobility(2))
+    # a lone RanCell cannot host a multi-site handover target: rejected
+    # at construction, not by an IndexError at the first A3 trigger
+    with pytest.raises(ValueError, match="MultiCell"):
+        CellSimulator(plan=plan, system=system, n_ues=2, seed=0,
+                      execute_model=False,
+                      ran=RanCell(policy=make_policy("rr")),
+                      mobility=MobilityModel(
+                          two_cell_sites(400.0),
+                          [StaticTrajectory(30.0, 0.0)] * 2))
+    # migrated grant counters span cells, so the grids must agree
+    with pytest.raises(ValueError, match="share one RanConfig"):
+        MultiCell([RanCell(policy=make_policy("rr"),
+                           cfg=RanConfig(n_prbs=100)),
+                   RanCell(policy=make_policy("rr"),
+                           cfg=RanConfig(n_prbs=50))])
+    with pytest.raises(ValueError, match="at least one RanCell"):
+        MultiCell([])
+    with pytest.raises(ValueError, match="at least one CellSite"):
+        MobilityModel([], [StaticTrajectory()])
+    with pytest.raises(ValueError, match="Trajectory"):
+        MobilityModel([CellSite(0.0, 0.0)], [])

@@ -1,0 +1,223 @@
+"""Property-based invariants for the RAN MAC (core/ran.py), over random
+loads, scheduler policies and PRB grids (hypothesis):
+
+  * per-TTI PRB grants never exceed the grid and never exceed need,
+  * schedulers are work-conserving (grant min(total need, n_prbs)),
+  * EDF never idles a nonempty queue, and serves in deadline order,
+  * byte conservation through ``RanCell.serve_slot`` (all enqueued bytes
+    are delivered) and through a partially-advanced ``RanStream``
+    (enqueued = delivered + still-queued backlog, HARQ re-enqueues
+    included by construction of the remaining-bits ledger).
+
+Each invariant lives in a plain ``check_*`` helper so the module's logic
+is importable without hypothesis; the ``@given`` wrappers drive them
+with random cases.  CI runs this module as a separate non-blocking job
+with a fixed ``--hypothesis-seed`` (.github/workflows/ci.yml)."""
+import numpy as np
+import pytest
+
+from repro.core.ran import (POLICIES, RanCell, RanConfig, RanStream,
+                            SlotView, UplinkRequest, make_policy)
+
+pytest.importorskip("hypothesis")  # optional test dep; skip module without it
+from hypothesis import given, settings, strategies as st
+
+POLICY_NAMES = sorted(POLICIES)
+
+
+# ---------------------------------------------------------------------------
+# invariant checkers (plain functions -- importable without hypothesis)
+# ---------------------------------------------------------------------------
+
+def make_view(remaining_bits, bits_per_prb, deadlines, n_prbs,
+              tti_s=1e-3, now_s=0.0) -> SlotView:
+    rem = np.asarray(remaining_bits, float)
+    return SlotView(now_s=now_s, tti_s=tti_s, active=rem > 0,
+                    remaining_bits=rem,
+                    bits_per_prb=np.asarray(bits_per_prb, float),
+                    deadline_s=np.asarray(deadlines, float),
+                    ue_ids=np.arange(len(rem)), n_prbs=n_prbs)
+
+
+def check_grant_invariants(policy_name: str, view: SlotView):
+    """Grants are non-negative, never exceed the grid, never exceed each
+    queue's need, and are work-conserving."""
+    policy = make_policy(policy_name)
+    policy.reset(len(view.ue_ids))
+    alloc = policy.grant(view)
+    need = view.need_prbs()
+    assert np.all(alloc >= 0), f"{policy_name} granted negative PRBs"
+    assert alloc.sum() <= view.n_prbs, \
+        f"{policy_name} over-granted the grid: {alloc.sum()} > {view.n_prbs}"
+    assert np.all(alloc <= need), \
+        f"{policy_name} granted beyond need: {alloc} vs {need}"
+    assert np.all(alloc[~view.active] == 0), \
+        f"{policy_name} granted an inactive queue"
+    # work conservation: the grid is filled up to total need
+    assert alloc.sum() == min(int(need.sum()), view.n_prbs), \
+        f"{policy_name} idled PRBs: granted {alloc.sum()}, " \
+        f"need {need.sum()}, grid {view.n_prbs}"
+    return alloc
+
+
+def check_edf_order(view: SlotView):
+    """EDF never idles a nonempty queue while earlier-deadline queues
+    are unsatisfied: any queue granted less than its need must not
+    precede (in deadline order) a queue that got PRBs."""
+    alloc = check_grant_invariants("edf", view)
+    if not view.active.any():
+        return
+    need = view.need_prbs()
+    order = sorted(np.flatnonzero(view.active),
+                   key=lambda i: (view.deadline_s[i], need[i],
+                                  view.ue_ids[i]))
+    # walking the priority order, once one queue is under-served every
+    # later queue must get nothing
+    starved = False
+    for i in order:
+        if starved:
+            assert alloc[i] == 0, \
+                "EDF served a later deadline past a starved earlier one"
+        if alloc[i] < need[i]:
+            starved = True
+
+
+def check_serve_slot_conservation(policy_name, sizes, rates, n_prbs,
+                                  bler, seed):
+    """Every enqueued byte is delivered by the time serve_slot returns,
+    the air-interface ledger conserves bytes through HARQ (delivered
+    bits recorded in the grant trace sum to the offered bits -- failed
+    transport blocks re-enqueue, nothing vanishes or duplicates),
+    per-TTI grants stay inside the grid, and retransmissions <=
+    transmissions."""
+    cell = RanCell(policy=make_policy(policy_name),
+                   cfg=RanConfig(n_prbs=n_prbs, tti_s=1e-3,
+                                 bler_target=bler),
+                   record_trace=True)
+    cell.reset(len(sizes))
+    reqs = [UplinkRequest(ue_id=i, n_bytes=int(b), enqueue_s=0.0,
+                          deadline_s=10.0, link_rate_bps=float(r))
+            for i, (b, r) in enumerate(zip(sizes, rates))]
+    reports = cell.serve_slot(reqs, np.random.default_rng(seed))
+    assert set(reports) == set(range(len(sizes)))
+    for i in range(len(sizes)):
+        rep = reports[i]
+        assert rep.n_bytes == int(sizes[i])           # nothing lost
+        assert rep.finish_s >= rep.enqueue_s
+        assert rep.n_harq_retx <= rep.n_tx
+        assert 0.0 <= rep.prb_share <= 1.0 + 1e-9
+    n_entries = 0
+    delivered_bits = 0.0
+    for k, grants in cell.grant_trace:
+        assert sum(g[1] for g in grants) <= n_prbs, \
+            f"TTI {k} over-granted the grid"
+        assert all(g[1] > 0 for g in grants)
+        delivered_bits += sum(g[2] for g in grants)
+        n_entries += len(grants)
+    total_bits = sum(int(b) * 8.0 for b in sizes)
+    # the trace records delivered bits truncated to ints: allow one bit
+    # of truncation per trace entry
+    assert abs(delivered_bits - total_bits) <= n_entries + 1e-6, \
+        (delivered_bits, total_bits)
+
+
+def check_stream_conservation(policy_name, sizes, rates, n_prbs,
+                              bler, seed, until_s):
+    """Partial advance: at every watermark, enqueued bits == delivered
+    bits + still-queued backlog (byte conservation with HARQ in flight
+    -- a failed transport block's bytes return to the queue, never
+    vanish or duplicate), each flow's remaining-bits ledger drains
+    monotonically inside its enqueued bounds, every flow finishes
+    exactly once, and the final drain delivers everything."""
+    cell = RanCell(policy=make_policy(policy_name),
+                   cfg=RanConfig(n_prbs=n_prbs, tti_s=1e-3,
+                                 bler_target=bler))
+    cell.reset(len(sizes))
+    stream = RanStream(cell)
+    flows = [stream.enqueue(
+        UplinkRequest(ue_id=i, n_bytes=int(b), enqueue_s=0.0,
+                      deadline_s=10.0, link_rate_bps=float(r)),
+        cohort=0)
+        for i, (b, r) in enumerate(zip(sizes, rates))]
+    total_bits = sum(int(b) * 8.0 for b in sizes)
+    rng = np.random.default_rng(seed)
+    prev_rem = [f.rem_bits for f in flows]
+    all_finished = []
+    for w in (until_s, until_s * 2, float("inf")):
+        all_finished.extend(stream.advance(w, rng))
+        for j, f in enumerate(flows):
+            assert 0.0 <= f.rem_bits <= f.req.n_bytes * 8.0
+            assert f.rem_bits <= prev_rem[j]          # monotone drain
+            prev_rem[j] = f.rem_bits
+            assert f.done == (f.rem_bits == 0.0)
+        delivered = sum(f.req.n_bytes * 8.0 - f.rem_bits for f in flows)
+        backlog = stream.backlog_bytes * 8.0
+        assert delivered + backlog == pytest.approx(total_bits), \
+            (delivered, backlog, total_bits)
+    # every flow finished exactly once, everything was delivered
+    assert sorted(f.req.ue_id for f in all_finished) \
+        == list(range(len(sizes)))
+    for f in flows:
+        assert f.done and f.rem_bits == 0.0 and f.finish_s >= 0.0
+    assert stream.backlog_bytes == 0.0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis drivers
+# ---------------------------------------------------------------------------
+
+@st.composite
+def slot_views(draw):
+    n = draw(st.integers(min_value=1, max_value=12))
+    n_prbs = draw(st.integers(min_value=1, max_value=273))
+    rem = draw(st.lists(
+        st.one_of(st.just(0.0),
+                  st.floats(min_value=1.0, max_value=5e6)),
+        min_size=n, max_size=n))
+    bpp = draw(st.lists(st.floats(min_value=10.0, max_value=1e5),
+                        min_size=n, max_size=n))
+    dead = draw(st.lists(st.floats(min_value=0.0, max_value=10.0),
+                         min_size=n, max_size=n))
+    return make_view(rem, bpp, dead, n_prbs)
+
+
+load_args = dict(
+    sizes=st.lists(st.integers(min_value=1, max_value=300_000),
+                   min_size=1, max_size=8),
+    n_prbs=st.integers(min_value=4, max_value=273),
+    bler=st.sampled_from([0.0, 0.05, 0.1, 0.3]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(policy=st.sampled_from(POLICY_NAMES), view=slot_views())
+def test_grants_never_exceed_grid_or_need(policy, view):
+    if view.active.any():
+        check_grant_invariants(policy, view)
+
+
+@settings(max_examples=60, deadline=None)
+@given(view=slot_views())
+def test_edf_never_idles_a_nonempty_queue(view):
+    check_edf_order(view)
+
+
+@settings(max_examples=25, deadline=None)
+@given(policy=st.sampled_from(POLICY_NAMES),
+       rate=st.floats(min_value=5e6, max_value=1e8), **load_args)
+def test_serve_slot_byte_conservation(policy, sizes, rate, n_prbs, bler,
+                                      seed):
+    rates = [rate] * len(sizes)
+    check_serve_slot_conservation(policy, sizes, rates, n_prbs, bler, seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(policy=st.sampled_from(POLICY_NAMES),
+       rate=st.floats(min_value=5e6, max_value=1e8),
+       until_s=st.floats(min_value=0.001, max_value=0.5), **load_args)
+def test_stream_byte_conservation(policy, sizes, rate, n_prbs, bler, seed,
+                                  until_s):
+    rates = [rate] * len(sizes)
+    check_stream_conservation(policy, sizes, rates, n_prbs, bler, seed,
+                              until_s)
