@@ -28,7 +28,7 @@ def main() -> int:
                             bench_dupf, bench_e2e_delay,
                             bench_energy_breakdown, bench_energy_privacy,
                             bench_estimator, bench_mobility, bench_ran,
-                            bench_streaming, bench_tx_energy)
+                            bench_scale, bench_streaming, bench_tx_energy)
 
     benches = [
         # fast mode: reduced model, same legacy-vs-fused comparison + the
@@ -52,6 +52,11 @@ def main() -> int:
         # anchors (static point bitwise == today's engine, miss/age rise
         # with speed, dUPF beats cUPF mean+std under identical seeds)
         ("mobility_handover", lambda: bench_mobility.run(fast=True)),
+        # fast mode: ~1k flows + 2 forced devices, same acceptance
+        # anchors (oracle schedule identical, speedup floor, sub-linear
+        # device scaling); the full 64 -> 50k sweep is the module's
+        # __main__ and commits results/bench_scale.json
+        ("city_scale", lambda: bench_scale.run(fast=True)),
     ]
     if args.only:
         benches = [(n, f) for n, f in benches if args.only in n]

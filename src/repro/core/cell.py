@@ -336,9 +336,19 @@ class CellSimulator:
     # (core/mobility.py).  Event-engine only: handover events live on the
     # absolute clock, so ``run``/``step`` refuse it.
     mobility: Optional[MobilityModel] = None
+    # MAC engine: "python" runs core/ran.py as-is; "vectorized" swaps the
+    # TTI loops for the batched lax.scan kernels (core/ran_vec.py), which
+    # replay the Python engine's grant traces, HARQ outcomes and reports
+    # field-exactly (the Python engine stays the bitwise oracle) while
+    # scaling the MAC hot path to 10k+ UEs.  Ignored when ran is None
+    # (the legacy radio has no TTI loop to vectorize).
+    engine: str = "python"
     stats: CellStats = field(default_factory=CellStats)
 
     def __post_init__(self):
+        if self.engine not in ("python", "vectorized"):
+            raise ValueError(f"unknown MAC engine {self.engine!r}; "
+                             f"choose 'python' or 'vectorized'")
         self.narrowband = np.broadcast_to(
             np.asarray(self.narrowband, bool), (self.n_ues,)).copy()
         if isinstance(self.ran, MultiCell):
@@ -405,6 +415,14 @@ class CellSimulator:
         self._last_reports: Dict[int, GrantReport] = {}
         if self.ran is not None:
             self.ran.reset(self.n_ues)
+        # the MAC the lock-step engine actually drives: the RanCell
+        # itself, or its vectorized twin (policy state freshly adopted
+        # post-reset, so both engines start from the same zeros)
+        self._mac = self.ran
+        if self.engine == "vectorized" and self.ran is not None \
+                and not isinstance(self.ran, MultiCell):
+            from repro.core.ran_vec import VecRanCell
+            self._mac = VecRanCell.from_cell(self.ran)
         self._controllers = (self.controller.spawn(self.n_ues)
                              if self.controller is not None else None)
         if self._controllers and not isinstance(self.plan, SwinSplitPlan):
@@ -509,7 +527,10 @@ class CellSimulator:
                                   deadline_s=self.frame_budget_s,
                                   link_rate_bps=float(link[i]))
                     for i in range(n) if offload[i] and comp_b[i] > 0]
-            reports = self.ran.serve_slot(reqs, self._harq_rng)
+            reports = self._mac.serve_slot(reqs, self._harq_rng)
+            if self._mac is not self.ran and self.ran.record_trace:
+                # keep the user-visible trace on the RanCell they passed
+                self.ran.grant_trace = self._mac.grant_trace
             rates = np.asarray(link, float).copy()
             tx_s = np.zeros(n)
             air_s = np.zeros(n)

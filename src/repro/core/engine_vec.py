@@ -1,0 +1,300 @@
+"""City-scale multi-cell MAC: the TTI scan kernel vmapped over a cell axis.
+
+``MultiCellVecMac`` runs every cell of a homogeneous deployment through
+ONE batched ``lax.scan`` -- carry and request arrays carry a leading
+cell axis, so C cells cost one XLA dispatch per chunk instead of C
+python round-trips.  The cell axis can be placed on a device mesh
+(``launch.sharding.cell_axis_sharding``), which is how a city-scale
+deployment spreads across accelerators.
+
+Exactness discipline is inherited from ``core/ran_vec.py``: each cell
+keeps its own uniform tape paired with its own HARQ generator, and the
+kernel advances each cell's tape pointer by that cell's REAL request
+count (``n_draw``), so lane padding to the common batch width never
+desynchronizes the rng stream.  ``tests/test_engine_vec.py`` asserts the
+batched path reproduces per-cell ``VecRanCell`` (and therefore the
+python oracle) bit-for-bit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.ran import (GrantReport, MultiCell, RanCell, RanConfig,
+                            UplinkRequest)
+from repro.core.ran_vec import (_DONE, _PF, _RR, _RUNNING, _SLOT_GUARD,
+                                _UniformTape, _chunk_schedule, _pad_len,
+                                _slot_chunk_impl, _x64, VecRanCell,
+                                mcs_index_vec, policy_code)
+
+_BATCHED_CACHE: Dict[tuple, object] = {}
+
+
+def _batched_chunk(steps: int, n_prbs: int, policy: int):
+    """jit(vmap) of the slot kernel over the cell axis, cached per static
+    signature.  Scalars (tti / bler / max_slots) broadcast; everything
+    else -- carry leaves, request arrays, tape buffers, draw widths --
+    is batched on axis 0."""
+    key = (steps, n_prbs, policy)
+    fn = _BATCHED_CACHE.get(key)
+    if fn is None:
+        import jax
+
+        def one(carry, enq, dead, bpp, ue, buf, n_draw, tti, bler, max_slots):
+            return _slot_chunk_impl(carry, enq, dead, bpp, ue, buf, n_draw,
+                                    tti, bler, max_slots, steps=steps,
+                                    n_prbs=n_prbs, policy=policy,
+                                    record=False)
+
+        fn = jax.jit(jax.vmap(
+            one, in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None)))
+        _BATCHED_CACHE[key] = fn
+    return fn
+
+
+class MultiCellVecMac:
+    """Batched ``serve_slot`` over a homogeneous multi-cell deployment.
+
+    Construct from a ``MultiCell`` (or any sequence of ``RanCell`` /
+    ``VecRanCell`` sharing one ``RanConfig`` and policy class), then call
+    ``serve_slot_arrays`` with one request batch and one HARQ generator
+    per cell.  Policy state (RR pointer, PF EWMA) persists per cell,
+    exactly like the per-cell oracle objects.
+
+    ``mesh``: optional ``jax.sharding.Mesh``; when given, the cell axis
+    is placed with ``cell_axis_sharding`` so the batched scan runs
+    sharded across the mesh's batch devices.
+    """
+
+    def __init__(self, cells, mesh=None):
+        if isinstance(cells, MultiCell):
+            cells = cells.cells
+        cells = list(cells)
+        if not cells:
+            raise ValueError("MultiCellVecMac needs at least one cell")
+        vcells = [c if isinstance(c, VecRanCell) else VecRanCell.from_cell(c)
+                  for c in cells]
+        cfg0, pol0 = vcells[0].cfg, vcells[0].policy
+        for vc in vcells[1:]:
+            if vc.cfg != cfg0 or vc.policy != pol0:
+                raise ValueError(
+                    "MultiCellVecMac: all cells must share one RanConfig "
+                    "and scheduler policy (heterogeneous deployments run "
+                    "per-cell VecRanCells instead)")
+        self.cfg: RanConfig = cfg0
+        self.policy: int = pol0
+        self.n_cells = len(vcells)
+        self.mesh = mesh
+        self._tapes = [_UniformTape() for _ in vcells]
+        self._rr_ptr = np.array([vc._rr_ptr for vc in vcells], np.int64)
+        self._pf_avg = [np.array(vc._pf_avg, np.float64) for vc in vcells]
+
+    # -- placement -----------------------------------------------------------
+    def _put(self, tree):
+        if self.mesh is None:
+            return tree
+        import jax
+        from repro.launch.sharding import cell_axis_sharding
+        s = cell_axis_sharding(self.mesh, self.n_cells)
+        return jax.tree_util.tree_map(lambda x: jax.device_put(x, s), tree)
+
+    # -- one frame-slot across all cells -------------------------------------
+    def serve_slot_arrays(self, batches: Sequence[Dict[str, np.ndarray]],
+                          rngs: Sequence[np.random.Generator],
+                          ) -> List[Dict[str, np.ndarray]]:
+        """Array-in / array-out ``serve_slot`` for every cell at once.
+
+        ``batches[c]`` holds cell c's requests as arrays (``ue``,
+        ``n_bytes``, ``enq``, ``dead``, ``link_rate_bps``; possibly
+        empty), ``rngs[c]`` its HARQ generator.  Returns one report-field
+        dict per cell, floats identical to the per-cell oracle's.
+        """
+        import jax.numpy as jnp
+        cfg = self.cfg
+        C = self.n_cells
+        if len(batches) != C or len(rngs) != C:
+            raise ValueError("need one request batch and one rng per cell")
+        n_real = np.array([len(b["ue"]) for b in batches], np.int64)
+        if not n_real.any():
+            return [{} for _ in range(C)]
+        n = _pad_len(int(n_real.max()))
+
+        ue = np.zeros((C, n), np.int64)
+        nb = np.zeros((C, n), np.int64)
+        enq = np.full((C, n), np.inf)
+        dead = np.full((C, n), np.inf)
+        bpp = np.ones((C, n))
+        k0 = np.zeros(C, np.int64)
+        for c, b in enumerate(batches):
+            m = int(n_real[c])
+            if not m:
+                continue
+            ue[c, :m] = np.asarray(b["ue"], int)
+            nb[c, :m] = np.asarray(b["n_bytes"], int)
+            enq[c, :m] = np.asarray(b["enq"], float)
+            dead[c, :m] = np.asarray(b["dead"], float)
+            bpp[c, :m] = (np.asarray(b["link_rate_bps"], float) * cfg.tti_s
+                          / (cfg.n_prbs * (1.0 - cfg.bler_target)))
+            k0[c] = int(math.ceil(enq[c, :m].min() / cfg.tti_s))
+        rem = nb * 8.0
+        finish = np.where(rem > 0, np.nan, enq)
+
+        if self.policy == _PF:
+            want = _pad_len(int(ue.max()) + 1)
+            want = max([want] + [a.size for a in self._pf_avg])
+            pfa = np.zeros((C, want))
+            for c, a in enumerate(self._pf_avg):
+                pfa[c, :a.size] = a
+        else:
+            pfa = np.zeros((C, 0))
+
+        with _x64():
+            zc = lambda: jnp.zeros(C, jnp.int64)
+            zcn = lambda: jnp.zeros((C, n), jnp.int64)
+            carry = (jnp.full(C, _RUNNING, jnp.int64), jnp.asarray(k0),
+                     zc(), jnp.asarray(self._rr_ptr), zc(),
+                     jnp.asarray(rem), jnp.asarray(finish),
+                     zcn(), zcn(), zcn(), zcn(), jnp.asarray(pfa))
+            jenq, jdead, jbpp, jue, jnr = self._put(
+                (jnp.asarray(enq), jnp.asarray(dead), jnp.asarray(bpp),
+                 jnp.asarray(ue), jnp.asarray(n_real)))
+            carry = self._put(carry)
+            for steps in _chunk_schedule(C * n):
+                buf = np.zeros((C, steps * n))
+                for c in range(C):
+                    want = steps * int(n_real[c])
+                    self._tapes[c].fill(rngs[c], want)
+                    buf[c, :want] = self._tapes[c].buf[:want]
+                fn = _batched_chunk(steps, cfg.n_prbs, self.policy)
+                carry, _ = fn(carry, jenq, jdead, jbpp, jue,
+                              self._put(jnp.asarray(buf)), jnr,
+                              jnp.float64(cfg.tti_s),
+                              jnp.float64(cfg.bler_target),
+                              jnp.int64(cfg.max_slots))
+                codes = np.asarray(carry[0])
+                ptrs = np.asarray(carry[2])
+                for c in range(C):
+                    self._tapes[c].consume(int(ptrs[c]))
+                carry = carry[:2] + (self._put(zc()),) + carry[3:]
+                if (codes != _RUNNING).all():
+                    break
+            if (codes == _SLOT_GUARD).any():
+                raise RuntimeError(
+                    f"RanCell: uplink queues not drained after "
+                    f"{cfg.max_slots} TTIs "
+                    f"({cfg.max_slots * cfg.tti_s:.1f} s simulated); "
+                    f"raise RanConfig.max_slots or reduce the offered load")
+            self._rr_ptr = np.asarray(carry[3]).copy()
+            if self.policy == _PF:
+                pfa = np.asarray(carry[11])
+                self._pf_avg = [pfa[c].copy() for c in range(C)]
+            fin = np.asarray(carry[6])
+            grt = np.asarray(carry[7])
+            act = np.asarray(carry[8])
+            ntx = np.asarray(carry[9])
+            nrx = np.asarray(carry[10])
+
+        outs: List[Dict[str, np.ndarray]] = []
+        for c in range(C):
+            m = int(n_real[c])
+            if not m:
+                outs.append({})
+                continue
+            f, g, a = fin[c, :m], grt[c, :m], act[c, :m]
+            tx_s = f - enq[c, :m]
+            outs.append(dict(
+                finish_s=f, granted_prbs=g, active_slots=a,
+                n_tx=ntx[c, :m], n_harq_retx=nrx[c, :m], tx_s=tx_s,
+                realized_rate_bps=np.where(
+                    tx_s > 0, nb[c, :m] * 8.0
+                    / np.where(tx_s > 0, tx_s, 1.0), 0.0),
+                prb_share=np.where(
+                    a > 0, g / np.where(a > 0, cfg.n_prbs * a, 1), 0.0),
+                mcs=mcs_index_vec(bpp[c, :m]), bpp=bpp[c, :m]))
+        return outs
+
+    def serve_slot(self, requests: Sequence[Sequence[UplinkRequest]],
+                   rngs: Sequence[np.random.Generator],
+                   ) -> List[Dict[int, GrantReport]]:
+        """Object API: one ``UplinkRequest`` list per cell in, one
+        ``{ue_id: GrantReport}`` per cell out (oracle-identical)."""
+        batches = [dict(ue=np.array([r.ue_id for r in reqs]),
+                        n_bytes=np.array([r.n_bytes for r in reqs]),
+                        enq=np.array([r.enqueue_s for r in reqs]),
+                        dead=np.array([r.deadline_s for r in reqs]),
+                        link_rate_bps=np.array([r.link_rate_bps
+                                                for r in reqs]))
+                   if reqs else dict(ue=np.empty(0, int))
+                   for reqs in requests]
+        arrs = self.serve_slot_arrays(batches, rngs)
+        out: List[Dict[int, GrantReport]] = []
+        for reqs, a in zip(requests, arrs):
+            reports: Dict[int, GrantReport] = {}
+            for i, r in enumerate(reqs):
+                reports[int(r.ue_id)] = GrantReport(
+                    ue_id=int(r.ue_id), n_bytes=int(r.n_bytes),
+                    enqueue_s=float(r.enqueue_s),
+                    finish_s=float(a["finish_s"][i]),
+                    tx_s=float(a["tx_s"][i]),
+                    granted_prbs=int(a["granted_prbs"][i]),
+                    active_slots=int(a["active_slots"][i]),
+                    n_tx=int(a["n_tx"][i]),
+                    n_harq_retx=int(a["n_harq_retx"][i]),
+                    realized_rate_bps=float(a["realized_rate_bps"][i]),
+                    prb_share=float(a["prb_share"][i]),
+                    mcs=int(a["mcs"][i]))
+            out.append(reports)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# synthetic city workloads (benchmarks / scale tests)
+# ---------------------------------------------------------------------------
+
+def synthetic_city(n_ues: int, n_cells: int = 1, seed: int = 0, *,
+                   mean_bytes: int = 30_000) -> List[Dict[str, np.ndarray]]:
+    """Deterministic per-cell uplink request batches for scale benches.
+
+    UEs are assigned to cells round-robin (so every cell gets an equal
+    slice and the batch width is balanced); per-cell draws come from
+    spawned ``SeedSequence`` streams, so the workload for cell c is
+    independent of ``n_cells`` partitioning noise.  Link rates span
+    20--200 Mbps log-uniform, payloads 2 KB -- 2x ``mean_bytes``, with
+    small enqueue jitter and 50--100 ms deadlines.
+    """
+    counts = [len(range(c, n_ues, n_cells)) for c in range(n_cells)]
+    seeds = np.random.SeedSequence(seed).spawn(n_cells)
+    batches = []
+    for c in range(n_cells):
+        r = np.random.default_rng(seeds[c])
+        m = counts[c]
+        enq = r.random(m) * 0.01
+        batches.append(dict(
+            ue=np.arange(m),
+            n_bytes=r.integers(2_000, 2 * mean_bytes, m),
+            enq=enq,
+            dead=enq + 0.05 + r.random(m) * 0.05,
+            link_rate_bps=10.0 ** r.uniform(7.3, 8.3, m)))
+    return batches
+
+
+def synthetic_flows(n_flows: int, seed: int = 0, *,
+                    n_ues: Optional[int] = None,
+                    mean_bytes: int = 30_000) -> Dict[str, np.ndarray]:
+    """Deterministic single-cell streaming workload: ``n_flows`` flows
+    over ``n_ues`` UEs (default one flow per UE), staggered arrivals.
+    Feed the same arrays to ``RanStream.enqueue`` and
+    ``VecRanStream.enqueue`` to race the two engines on identical
+    input."""
+    n_ues = n_ues or n_flows
+    r = np.random.default_rng(seed)
+    enq = np.sort(r.random(n_flows) * 0.2)
+    return dict(
+        ue=np.arange(n_flows) % n_ues,
+        n_bytes=r.integers(max(mean_bytes // 2, 1), 2 * mean_bytes, n_flows),
+        enq=enq,
+        dead=enq + 0.1 + r.random(n_flows) * 0.1,
+        link_rate_bps=10.0 ** r.uniform(7.3, 8.3, n_flows),
+        cohort=np.arange(n_flows) // max(n_ues, 1))

@@ -125,11 +125,14 @@ class SlotView:
     deadline_s: np.ndarray
     ue_ids: np.ndarray
     n_prbs: int
+    _need: np.ndarray = None    # lazy need_prbs cache (state is per-TTI)
 
     def need_prbs(self) -> np.ndarray:
         """PRBs each active request needs to drain its queue this TTI."""
-        need = np.ceil(self.remaining_bits / self.bits_per_prb)
-        return np.where(self.active, need, 0).astype(int)
+        if self._need is None:
+            need = np.ceil(self.remaining_bits / self.bits_per_prb)
+            self._need = np.where(self.active, need, 0).astype(int)
+        return self._need
 
 
 # ---------------------------------------------------------------------------
@@ -138,39 +141,60 @@ class SlotView:
 
 def _greedy_fill(order: Sequence[int], need: np.ndarray,
                  n_prbs: int) -> np.ndarray:
-    """Grant each request (in priority order) up to its need."""
+    """Grant each request (in priority order) up to its need.
+
+    Closed form of the sequential fill: request ``order[j]`` sees
+    ``n_prbs`` minus everything granted before it, clipped to [0, need].
+    """
     alloc = np.zeros_like(need)
-    left = n_prbs
-    for i in order:
-        if left <= 0:
-            break
-        g = min(int(need[i]), left)
-        alloc[i] = g
-        left -= g
+    order = np.asarray(order, dtype=int)
+    if order.size == 0:
+        return alloc
+    no = need[order]
+    cum = np.cumsum(no)
+    alloc[order] = np.clip(n_prbs - (cum - no), 0, no)
     return alloc
 
 
 def _equal_fill(order: Sequence[int], need: np.ndarray,
                 n_prbs: int) -> np.ndarray:
     """Water-filled equal shares: split the grid evenly, recycle PRBs a
-    draining UE cannot use, hand the remainder out in ``order``."""
+    draining UE cannot use, hand the remainder out in ``order``.
+
+    Closed form of the round-based refill loop: every request still
+    unsatisfied after the loop holds the same water level L -- the
+    largest integer with sum(min(need, L)) <= n_prbs -- and the leftover
+    PRBs go one each to the first ``left`` unsatisfied requests in
+    ``order``.  L is found by bisection on the sorted needs' prefix sums.
+    """
     alloc = np.zeros_like(need)
-    left = n_prbs
-    unsat = [i for i in order if need[i] > 0]
-    while left > 0 and unsat:
-        q = left // len(unsat)
-        if q == 0:
-            for i in unsat[:left]:
-                alloc[i] += 1
-            break
-        nxt = []
-        for i in unsat:
-            g = min(q, int(need[i]) - int(alloc[i]))
-            alloc[i] += g
-            left -= g
-            if need[i] - alloc[i] > 0:
-                nxt.append(i)
-        unsat = nxt
+    order = np.asarray(order, dtype=int)
+    nz = order[need[order] > 0]
+    if nz.size == 0 or n_prbs <= 0:
+        return alloc
+    nd = need[nz]
+    s = np.sort(nd)
+    prefix = np.cumsum(s)
+    m = nd.size
+    if int(prefix[-1]) <= n_prbs:
+        level = int(s[-1])              # everyone drains; no remainder pass
+    else:
+        lo, hi = 0, int(s[-1])
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            j = int(np.searchsorted(s, mid, side="right"))
+            filled = (int(prefix[j - 1]) if j else 0) + (m - j) * mid
+            if filled <= n_prbs:
+                lo = mid
+            else:
+                hi = mid - 1
+        level = lo
+    got = np.minimum(nd, level)
+    left = n_prbs - int(got.sum())
+    if left > 0:
+        unsat = np.flatnonzero(nd > level)
+        got[unsat[:left]] += 1
+    alloc[nz] = got
     return alloc
 
 
@@ -214,13 +238,14 @@ class ProportionalFairScheduler(SchedulerPolicy):
     name = "pf"
     alpha = 0.1                 # EWMA smoothing
     eps_bps = 1e3               # floor so unserved UEs have finite metric
+    _avg = np.zeros(0)          # grown by _ensure / replaced by reset
 
     def reset(self, n_ues: int):
         self._avg = np.zeros(n_ues)
 
     def _ensure(self, n_ues: int):
-        if not hasattr(self, "_avg") or self._avg.size < n_ues:
-            old = getattr(self, "_avg", np.zeros(0))
+        if self._avg.size < n_ues:
+            old = self._avg
             self._avg = np.zeros(n_ues)
             self._avg[:old.size] = old
 
@@ -253,8 +278,11 @@ class DeadlineEDFScheduler(SchedulerPolicy):
     def grant(self, view: SlotView) -> np.ndarray:
         idx = np.flatnonzero(view.active)
         need = view.need_prbs()
-        order = sorted(idx, key=lambda i: (view.deadline_s[i], need[i],
-                                           view.ue_ids[i]))
+        # stable lexicographic (deadline, residual, ue_id) -- same order
+        # the old sorted(key=tuple) produced, without the Python-level
+        # comparison loop (the 1k-UE oracle's worst per-TTI cost)
+        order = idx[np.lexsort((view.ue_ids[idx], need[idx],
+                                view.deadline_s[idx]))]
         return _greedy_fill(order, need, view.n_prbs)
 
 

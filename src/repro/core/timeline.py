@@ -281,7 +281,14 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
     else:
         ran_cells = sim.ran.cells if isinstance(sim.ran, MultiCell) \
             else [sim.ran]
-        streams = [RanStream(c) for c in ran_cells]
+        if sim.engine == "vectorized":
+            # batched lax.scan MAC (core/ran_vec.py): same API, same
+            # draw-for-draw HARQ stream, field-exact flow reports -- the
+            # event loop above this line cannot tell the engines apart
+            from repro.core.ran_vec import VecRanStream
+            streams = [VecRanStream(c, n) for c in ran_cells]
+        else:
+            streams = [RanStream(c) for c in ran_cells]
         # cell 0 keeps the simulator's original HARQ stream; extra cells
         # draw from their own dedicated children (cell.py reset)
         harq_rngs = sim._harq_rngs

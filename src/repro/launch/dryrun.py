@@ -107,7 +107,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
         return cell
     t0 = time.time()
     try:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+        # strict: the dry-run NEEDS the forced 512-device topology; a
+        # silent single-device fallback would "pass" the wrong shardings
+        mesh = make_production_mesh(multi_pod=multi_pod, strict=True)
         rules = ShardingRules(fsdp=fsdp)
         kw: Dict[str, Any] = {"rules": rules}
         if shape.kind == "train":

@@ -119,6 +119,19 @@ def batch_shardings(mesh: Mesh, abstract_batch):
     return jax.tree.map(one, abstract_batch)
 
 
+def cell_axis_sharding(mesh: Mesh, n_cells: int) -> NamedSharding:
+    """Leading-axis sharding for the vectorized MAC's stacked per-cell
+    state (core/engine_vec.py): cells ride dim 0 over the mesh's batch
+    axes -- the scan kernel is elementwise across cells, so XLA
+    partitions it without any cross-device collective -- with the usual
+    divisibility fallback to replication (a CPU-only host's 1-device
+    mesh simply keeps everything local)."""
+    ba = batch_axes(mesh)
+    if ba and n_cells % int(np.prod([mesh.shape[a] for a in ba])) == 0:
+        return NamedSharding(mesh, P(ba))
+    return NamedSharding(mesh, P())
+
+
 def cache_shardings(mesh: Mesh, abstract_caches):
     """Decode caches.  Heuristic per leaf (leading dim = stacked layers):
     shard the batch dim over the batch axes when divisible; shard the

@@ -1,0 +1,255 @@
+"""Oracle-equivalence tests for the vectorized MAC (core/ran_vec.py).
+
+``RanCell``/``RanStream`` (core/ran.py) remain the bitwise oracle; the
+batched ``lax.scan`` kernels in ``VecRanCell``/``VecRanStream`` must
+reproduce them FIELD-EXACTLY -- same grants, same HARQ outcomes, same
+``GrantReport`` floats, same rng stream position afterwards.  These
+tests fuzz both engines side by side with paired generators and assert
+float equality (no tolerances): any drift is an rng-pairing or
+scheduling bug, not noise.
+
+Edge cases asserted identical on both engines:
+
+  * zero-backlog slots (empty request list, all-zero payloads),
+  * all-same-deadline EDF ties at >256 active flows, which forces the
+    ``_grant_fast`` candidate-window safety check to take the dense
+    ``_grant_kernel`` fallback branch,
+  * PF EWMA decay for silent UEs (UE set changes between slots),
+  * ``jain_fairness`` on empty / singleton / all-zero inputs.
+"""
+import numpy as np
+import pytest
+
+from repro.core.ran import (RanCell, RanConfig, RanStream, UplinkRequest,
+                            jain_fairness, make_policy)
+from repro.core.ran_vec import VecRanCell, VecRanStream
+
+POLICIES = ("rr", "pf", "edf")
+
+REPORT_FIELDS = ("ue_id", "n_bytes", "enqueue_s", "finish_s", "tx_s",
+                 "granted_prbs", "active_slots", "n_tx", "n_harq_retx",
+                 "realized_rate_bps", "prb_share", "mcs")
+
+FLOW_FIELDS = ("rem_bits", "bpp", "granted", "act_slots", "n_tx",
+               "n_retx", "finish_s", "granted_at_admit")
+
+
+def _reqs(rng, n, n_ues=16):
+    ues = rng.choice(n_ues, size=n, replace=False)
+    return [UplinkRequest(
+        ue_id=int(ues[i]), n_bytes=int(rng.integers(0, 40000)),
+        enqueue_s=float(rng.random() * 0.01),
+        deadline_s=float(rng.random() * 0.05),
+        link_rate_bps=float(10e6 + rng.random() * 90e6)) for i in range(n)]
+
+
+def _cmp_reports(a, b, tag):
+    assert set(a) == set(b), (tag, "report keys")
+    for k in a:
+        for f in REPORT_FIELDS:
+            va, vb = getattr(a[k], f), getattr(b[k], f)
+            if isinstance(va, float) and np.isnan(va):
+                assert np.isnan(vb), (tag, k, f)
+            else:
+                assert float(va) == float(vb), (tag, k, f, va, vb)
+
+
+def _flow_eq(a, b, tag):
+    assert a.req == b.req, (tag, "req")
+    assert a.cohort == b.cohort, (tag, "cohort")
+    for f in FLOW_FIELDS:
+        va, vb = getattr(a, f), getattr(b, f)
+        if isinstance(va, float) and np.isnan(va):
+            assert np.isnan(vb), (tag, f, va, vb)
+        else:
+            assert float(va) == float(vb), (tag, f, va, vb)
+
+
+def _check_tape_position(tape, r_py, r_vec, tag):
+    """The oracle rng position must equal the vec rng position modulo the
+    unconsumed tape prefix (the vec side pre-draws HARQ uniforms)."""
+    nxt = r_py.random()
+    if tape.buf.size:
+        assert tape.buf[0] == nxt, (tag, "tape desync")
+    else:
+        assert nxt == r_vec.random(), (tag, "rng desync")
+
+
+# ---------------------------------------------------------------------------
+# slot-mode equality: VecRanCell.serve_slot vs RanCell.serve_slot
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pol", POLICIES)
+def test_slot_equality_fuzz(pol):
+    for trial in range(8):
+        seed = 1000 + trial
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 12))
+        rs = _reqs(rng, n)
+        cfg = RanConfig(tti_s=0.001, n_prbs=int(rng.integers(5, 120)))
+        oc = RanCell(policy=make_policy(pol), cfg=cfg, record_trace=True)
+        vc = VecRanCell.from_cell(oc)
+        oc.reset(16)
+        vc.reset(16)
+        r1 = np.random.default_rng(seed + 77)
+        r2 = np.random.default_rng(seed + 77)
+        # several slots back-to-back: policy state (RR pointer, PF EWMA)
+        # must persist identically across slot boundaries
+        for s in range(3):
+            _cmp_reports(oc.serve_slot(rs, r1), vc.serve_slot(rs, r2),
+                         (pol, trial, s))
+            assert oc.grant_trace == vc.grant_trace, (pol, trial, s)
+            _check_tape_position(vc._tape, r1, r2, (pol, trial, s))
+            if vc._tape.buf.size:
+                vc._tape.consume(1)
+            rs = _reqs(rng, n)
+
+
+@pytest.mark.parametrize("pol", POLICIES)
+def test_slot_zero_backlog(pol):
+    """Empty slots and all-zero payloads are served identically (and
+    don't desync the paired HARQ generators)."""
+    cfg = RanConfig(tti_s=0.001, n_prbs=20)
+    oc = RanCell(policy=make_policy(pol), cfg=cfg, record_trace=True)
+    vc = VecRanCell.from_cell(oc)
+    oc.reset(4)
+    vc.reset(4)
+    r1 = np.random.default_rng(9)
+    r2 = np.random.default_rng(9)
+    zero = [UplinkRequest(ue_id=u, n_bytes=0, enqueue_s=0.0,
+                          deadline_s=0.05, link_rate_bps=20e6)
+            for u in range(3)]
+    live = [UplinkRequest(ue_id=1, n_bytes=4000, enqueue_s=0.0,
+                          deadline_s=0.05, link_rate_bps=20e6)]
+    for rs in ([], zero, live, []):
+        _cmp_reports(oc.serve_slot(rs, r1), vc.serve_slot(rs, r2),
+                     (pol, len(rs)))
+    assert oc.grant_trace == vc.grant_trace
+    _check_tape_position(vc._tape, r1, r2, (pol, "zero-backlog"))
+
+
+def test_slot_pf_silent_ue_ewma():
+    """PF throughput EWMA decays for UEs absent from later slots; the
+    vectorized PF average must track the oracle exactly so priorities
+    (and therefore grants) stay identical once the UE returns."""
+    cfg = RanConfig(tti_s=0.001, n_prbs=12)
+    oc = RanCell(policy=make_policy("pf"), cfg=cfg, record_trace=True)
+    vc = VecRanCell.from_cell(oc)
+    oc.reset(6)
+    vc.reset(6)
+    r1 = np.random.default_rng(21)
+    r2 = np.random.default_rng(21)
+
+    def burst(ues):
+        return [UplinkRequest(ue_id=u, n_bytes=9000, enqueue_s=0.0,
+                              deadline_s=0.1,
+                              link_rate_bps=15e6 + 3e6 * u) for u in ues]
+
+    # UEs {0,1} transmit, then fall silent while {2,3} take over, then
+    # everyone contends: grants depend on the decayed averages.
+    for ues in ((0, 1), (0, 1), (2, 3), (2, 3), (0, 1, 2, 3)):
+        _cmp_reports(oc.serve_slot(burst(ues), r1),
+                     vc.serve_slot(burst(ues), r2), ("pf-silent", ues))
+    assert oc.grant_trace == vc.grant_trace
+
+
+# ---------------------------------------------------------------------------
+# stream-mode equality: VecRanStream.advance vs RanStream.advance
+# ---------------------------------------------------------------------------
+
+def _run_stream_pair(pol, seed):
+    rng = np.random.default_rng(seed)
+    cfg = RanConfig(tti_s=0.002, n_prbs=int(rng.integers(10, 80)))
+    oc = RanCell(policy=make_policy(pol), cfg=cfg)
+    oc.reset(8)
+    os_ = RanStream(oc)
+    vs = VecRanStream(RanCell(policy=make_policy(pol), cfg=cfg), n_ues=8)
+    vs.cell.reset(8)
+    r1 = np.random.default_rng(seed + 5)
+    r2 = np.random.default_rng(seed + 5)
+    t, cohort = 0.0, 0
+    for round_ in range(12):
+        for _ in range(int(rng.integers(1, 5))):
+            req = UplinkRequest(
+                ue_id=int(rng.integers(0, 8)),
+                n_bytes=int(rng.integers(1, 25000)),
+                enqueue_s=t + float(rng.random() * 0.01),
+                deadline_s=t + float(rng.random() * 0.08),
+                link_rate_bps=float(5e6 + rng.random() * 60e6))
+            os_.enqueue(req, cohort, meta=("m", round_))
+            vs.enqueue(req, cohort, meta=("m", round_))
+        cohort += 1
+        t += float(rng.random() * 0.05)
+        fa = os_.advance(t, r1)
+        fb = vs.advance(t, r2)
+        assert len(fa) == len(fb), (pol, seed, round_, len(fa), len(fb))
+        for x, y in zip(fa, fb):
+            _flow_eq(x, y, (pol, seed, round_))
+            ra, rb = os_.report(x), vs.report(y)
+            for f in REPORT_FIELDS:
+                assert float(getattr(ra, f)) == float(getattr(rb, f)), \
+                    (pol, seed, round_, f)
+        assert os_.backlog_bytes == vs.backlog_bytes, (pol, seed, round_)
+        if round_ == 5:  # handover: migrate a UE out, mutate, adopt back
+            mu = int(rng.integers(0, 8))
+            ma, mb = os_.migrate_ue(mu), vs.migrate_ue(mu)
+            assert len(ma) == len(mb)
+            for x, y in zip(ma, mb):
+                _flow_eq(x, y, (pol, seed, "mig"))
+                x.n_retx += 1
+                y.n_retx += 1
+                os_.adopt(x, t + 0.003, 999)
+                vs.adopt(y, t + 0.003, 999)
+    fa = os_.advance(float("inf"), r1)
+    fb = vs.advance(float("inf"), r2)
+    assert len(fa) == len(fb), (pol, seed, "drain")
+    for x, y in zip(fa, fb):
+        _flow_eq(x, y, (pol, seed, "drain"))
+    _check_tape_position(vs.cell._tape, r1, r2, (pol, seed))
+
+
+@pytest.mark.parametrize("pol", POLICIES)
+def test_stream_equality_fuzz(pol):
+    for seed in range(3):
+        _run_stream_pair(pol, 3000 + seed)
+
+
+def test_stream_edf_same_deadline_fallback():
+    """>256 active flows sharing one deadline: the f32 candidate window
+    in ``_grant_fast`` cannot separate ties, so the safety predicate
+    must route the grant through the dense fallback kernel -- and the
+    result must still match the oracle field-exactly."""
+    cfg = RanConfig(tti_s=0.002, n_prbs=24)
+    oc = RanCell(policy=make_policy("edf"), cfg=cfg)
+    oc.reset(64)
+    os_ = RanStream(oc)
+    vs = VecRanStream(RanCell(policy=make_policy("edf"), cfg=cfg), n_ues=64)
+    vs.cell.reset(64)
+    rng = np.random.default_rng(44)
+    r1 = np.random.default_rng(45)
+    r2 = np.random.default_rng(45)
+    for i in range(300):
+        req = UplinkRequest(ue_id=int(rng.integers(0, 64)),
+                            n_bytes=int(rng.integers(400, 4000)),
+                            enqueue_s=0.0, deadline_s=1.0,
+                            link_rate_bps=float(8e6 + rng.random() * 30e6))
+        os_.enqueue(req, 0, meta=("m", i))
+        vs.enqueue(req, 0, meta=("m", i))
+    fa = os_.advance(float("inf"), r1)
+    fb = vs.advance(float("inf"), r2)
+    assert len(fa) == len(fb) == 300
+    for x, y in zip(fa, fb):
+        _flow_eq(x, y, "edf-ties")
+    _check_tape_position(vs.cell._tape, r1, r2, "edf-ties")
+
+
+# ---------------------------------------------------------------------------
+# jain_fairness edge cases (used by both engines' KPI rollups)
+# ---------------------------------------------------------------------------
+
+def test_jain_fairness_edges():
+    assert jain_fairness([]) == 1.0          # vacuously fair
+    assert jain_fairness([0.0, 0.0]) == 1.0  # nobody served: not unfair
+    assert jain_fairness([7.5]) == 1.0       # singleton is always fair
+    assert jain_fairness([1.0, 1.0, 1.0]) == 1.0
+    assert jain_fairness([1.0, 0.0]) == pytest.approx(0.5)
