@@ -1,0 +1,179 @@
+"""Chaos / failure-injection sweep: outage severity -> recovery cost,
+plus the dUPF-failover availability claim as a *scenario*.
+
+Exercises the chaos subsystem (core/chaos.py) on the continuous-time
+event engine:
+
+  * **Zero-chaos anchor.**  A ChaosModel whose every spec is inert
+    (heartbeats tick, nothing is scheduled) is asserted rng-paired
+    BITWISE with the chaos-free engine -- the sweep's baseline IS
+    today's engine, not a lookalike.
+
+  * **Severity sweep.**  One edge-server outage opens at t0 = 5 s with
+    the drop policy; its duration scales across the sweep.  Every frame
+    arriving at the dead edge is lost, so time-to-recover, the longest
+    per-UE dropped-frame burst and the loss count rise monotonically
+    with outage duration while availability falls.
+
+  * **Failover vs none.**  The same cell is run twice with identical
+    seeds through one dUPF outage, once with mid-stream failover to the
+    cUPF path and once without: every radio draw pairs, so the delta is
+    the recovery policy alone.  Failover must yield strictly higher
+    availability; the heartbeat detects the outage within one period of
+    the timeout (detection is earned, not oracle); adaptive controllers
+    re-converge after fail-back and the re-convergence cost is measured.
+
+Acceptance anchors (asserted, persisted to results/bench_chaos.json):
+  * inert chaos bitwise == the chaos-free engine,
+  * time_to_recover and dropped-frame burst rise monotonically with
+    outage duration; availability falls monotonically,
+  * failover availability > no-failover availability, same seeds,
+  * detection latency inside (timeout - period, timeout + period],
+  * controller re-convergence after fail-back is measured (not None).
+
+    PYTHONPATH=src python -m benchmarks.bench_chaos
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, save
+from repro.configs.swin_t_detection import CONFIG
+from repro.core.adaptive import (DEFAULT_PRIVACY_PROFILE, AdaptiveController,
+                                 Objective)
+from repro.core.calibration import calibrate
+from repro.core.cell import CellSimulator
+from repro.core.channel import cupf_path, dupf_path
+from repro.core.chaos import ChaosConfig, ChaosModel, ChurnSpec, OutageSpec
+from repro.core.throughput import ConstantRateEstimator
+
+from repro.core.splitting import SwinSplitPlan
+
+T0 = 5.0                      # every injected outage opens here
+HB = dict(heartbeat_period_s=0.25, heartbeat_timeout_s=0.6)
+
+
+def _sim(system, plan, chaos, *, n_ues, seed, budget_s, adaptive=False):
+    ctrl = None
+    if adaptive:
+        ctrl = AdaptiveController(
+            system=system, estimator=ConstantRateEstimator(50e6),
+            objective=Objective(w_delay=1.0, w_energy=0.5, w_privacy=2.5),
+            path=dupf_path(), privacy_profile=dict(DEFAULT_PRIVACY_PROFILE))
+    return CellSimulator(plan=plan, system=system, n_ues=n_ues, seed=seed,
+                         execute_model=False, frame_budget_s=budget_s,
+                         controller=ctrl, chaos=chaos)
+
+
+def run(fast: bool = False, option: str = "split3", level: float = -40.0,
+        n_ues: int = 3, budget_s: float = 4.0, seed: int = 7):
+    system = calibrate()
+    plan = SwinSplitPlan(CONFIG, params=None)
+    fps = 0.5
+    n_frames = 24 if fast else 40
+    durations = (2.0, 5.0, 10.0) if fast else (2.0, 5.0, 10.0, 20.0)
+    trace = np.full((n_frames, n_ues), float(level))
+
+    table = {"config": {"option": option, "level_db": level, "n_ues": n_ues,
+                        "budget_s": budget_s, "n_frames": n_frames,
+                        "fps": fps, "fast": fast, "t0_s": T0, **HB}}
+
+    # -- zero-chaos anchor: inert chaos must BE the chaos-free engine --------
+    base = _sim(system, plan, None, n_ues=n_ues, seed=seed,
+                budget_s=budget_s).run_stream(trace, option=option, fps=fps)
+    inert = ChaosModel(ChaosConfig(
+        edge_outage=OutageSpec(), upf_outage=OutageSpec(),
+        blackout=OutageSpec(), churn=ChurnSpec(), **HB))
+    zero = _sim(system, plan, inert, n_ues=n_ues, seed=seed,
+                budget_s=budget_s).run_stream(trace, option=option, fps=fps)
+    paired = all(a == b for a, b in zip(base.logs, zero.logs)) \
+        and len(base.logs) == len(zero.logs)
+
+    # -- severity sweep: one edge outage, duration scales --------------------
+    print(f"  {'outage':>7s} | {'ttr':>6s} {'burst':>5s} {'lost':>4s} "
+          f"{'avail':>6s}")
+    rows = []
+    for dur in durations:
+        chaos = ChaosModel(ChaosConfig(
+            edge_outage=OutageSpec(schedule=((T0, dur),)),
+            edge_policy="drop", **HB))
+        res = _sim(system, plan, chaos, n_ues=n_ues, seed=seed,
+                   budget_s=budget_s).run_stream(trace, option=option,
+                                                 fps=fps)
+        [m] = res.recovery
+        row = {"outage_s": dur, "time_to_recover_s": m.time_to_recover_s,
+               "burst_len": m.burst_len, "n_lost": m.n_lost,
+               "detect_s": m.detect_s, "action": m.action,
+               "availability": res.stats.availability}
+        rows.append(row)
+        table[f"outage{dur:g}"] = row
+        print(f"  {dur:6.1f}s | {row['time_to_recover_s']:5.1f}s "
+              f"{row['burst_len']:5d} {row['n_lost']:4d} "
+              f"{row['availability']:6.3f}")
+
+    # -- failover vs none: identical seeds, the policy is the only delta -----
+    fo = {}
+    for name, failover in (("failover", True), ("none", False)):
+        chaos = ChaosModel(ChaosConfig(
+            upf_outage=OutageSpec(schedule=((T0, 8.0),)),
+            failover=failover, failover_path=cupf_path(), **HB))
+        res = _sim(system, plan, chaos, n_ues=n_ues, seed=seed,
+                   budget_s=budget_s, adaptive=True
+                   ).run_stream(trace, option=None, fps=fps)
+        [m] = res.recovery
+        fo[name] = {"availability": res.stats.availability,
+                    "n_lost_path": res.stats.n_lost_path,
+                    "detect_s": m.detect_s,
+                    "time_to_recover_s": m.time_to_recover_s,
+                    "reconverge_frames": m.reconverge_frames}
+    table["failover"] = fo
+    print(f"  failover avail {fo['failover']['availability']:.3f} vs "
+          f"none {fo['none']['availability']:.3f}; detect "
+          f"{fo['failover']['detect_s']:.2f}s; reconverge "
+          f"{fo['failover']['reconverge_frames']:.1f} frames")
+
+    # -- acceptance anchors ---------------------------------------------------
+    ttr = [r["time_to_recover_s"] for r in rows]
+    burst = [r["burst_len"] for r in rows]
+    avail = [r["availability"] for r in rows]
+    ttr_ok = all(b > a for a, b in zip(ttr, ttr[1:]))
+    burst_ok = (all(b >= a for a, b in zip(burst, burst[1:]))
+                and burst[-1] > burst[0])
+    avail_ok = all(b < a for a, b in zip(avail, avail[1:]))
+    fo_ok = fo["failover"]["availability"] > fo["none"]["availability"]
+    d = fo["failover"]["detect_s"] - T0
+    detect_ok = (HB["heartbeat_timeout_s"] - HB["heartbeat_period_s"]
+                 < d <= HB["heartbeat_timeout_s"] + HB["heartbeat_period_s"])
+    reconv_ok = fo["failover"]["reconverge_frames"] is not None
+    table["acceptance"] = {
+        "zero_chaos_rng_paired_bitwise": bool(paired),
+        "ttr_rises_with_outage": ttr_ok,
+        "burst_rises_with_outage": burst_ok,
+        "availability_falls_with_outage": avail_ok,
+        "failover_beats_none": fo_ok,
+        "detection_within_heartbeat_bounds": detect_ok,
+        "reconvergence_measured": reconv_ok,
+    }
+    assert paired, \
+        "inert chaos must replay the chaos-free engine bitwise"
+    assert ttr_ok, f"time-to-recover must rise with outage duration: {ttr}"
+    assert burst_ok, f"dropped-frame burst must rise with duration: {burst}"
+    assert avail_ok, f"availability must fall with duration: {avail}"
+    assert fo_ok, ("failover must beat no-failover availability under "
+                   f"identical seeds: {fo}")
+    assert detect_ok, f"detection latency {d:.2f}s outside heartbeat bounds"
+    assert reconv_ok, "adaptive re-convergence must be measured"
+
+    # fast mode gets its own results file (bench_compression convention):
+    # the CI smoke must not clobber the committed full-run curves
+    save("bench_chaos_fast" if fast else "bench_chaos", table)
+    return csv_line(
+        "chaos_recovery", 0,
+        f"ttr={ttr[0]:.1f}->{ttr[-1]:.1f}s;burst={burst[0]}->{burst[-1]};"
+        f"avail={avail[0]:.2f}->{avail[-1]:.2f};"
+        f"failover={fo['failover']['availability']:.2f}>"
+        f"none={fo['none']['availability']:.2f}")
+
+
+if __name__ == "__main__":
+    print(run())

@@ -24,8 +24,8 @@ def main() -> int:
                          "respect it")
     args = ap.parse_args()
 
-    from benchmarks import (bench_adaptive, bench_cell, bench_compression,
-                            bench_dupf, bench_e2e_delay,
+    from benchmarks import (bench_adaptive, bench_cell, bench_chaos,
+                            bench_compression, bench_dupf, bench_e2e_delay,
                             bench_energy_breakdown, bench_energy_privacy,
                             bench_estimator, bench_mobility, bench_ran,
                             bench_scale, bench_streaming, bench_tx_energy)
@@ -57,6 +57,12 @@ def main() -> int:
         # device scaling); the full 64 -> 50k sweep is the module's
         # __main__ and commits results/bench_scale.json
         ("city_scale", lambda: bench_scale.run(fast=True)),
+        # fast mode: shorter trace + coarser severity sweep, same
+        # acceptance anchors (inert chaos bitwise == today's engine,
+        # recovery cost rises with outage duration, failover beats
+        # no-failover); writes bench_chaos_fast.json so the CI smoke
+        # never clobbers the committed full-run curves
+        ("chaos_recovery", lambda: bench_chaos.run(fast=True)),
     ]
     if args.only:
         benches = [(n, f) for n, f in benches if args.only in n]

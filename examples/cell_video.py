@@ -25,9 +25,16 @@ channel becomes time-varying (distance path loss on the calibrated rate
 table), A3 handovers migrate byte queues between the cells' MACs on the
 absolute clock, and the per-UE table adds serving cells + handovers.
 
+``--chaos`` injects failures on the absolute clock (core/chaos.py): an
+edge-server outage (drop policy), a dUPF outage with heartbeat-detected
+failover to the cUPF path, a link blackout parking UE 0's byte queue,
+and UE churn -- the summary then adds per-outage recovery metrics
+(detection latency, time-to-recover, dropped-frame burst) and the
+cell's availability.
+
     PYTHONPATH=src python examples/cell_video.py [--ues 6] [--frames 12] \
         [--policy edf] [--budget 2.5] [--fps 0.5] [--jitter 0.05] \
-        [--inflight 2] [--mobility --speed 8]
+        [--inflight 2] [--mobility --speed 8] [--chaos]
 """
 import argparse
 
@@ -76,9 +83,16 @@ def main():
                          "--policy for a shared MAC per cell)")
     ap.add_argument("--speed", type=float, default=8.0,
                     help="UE speed in m/s for --mobility trajectories")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject an edge outage, a dUPF outage with "
+                         "failover, a link blackout and UE churn "
+                         "(core/chaos.py; needs --fps)")
     args = ap.parse_args()
     if args.mobility and args.fps is None:
         ap.error("--mobility needs --fps (handover events live on the "
+                 "event engine's absolute clock)")
+    if args.chaos and args.fps is None:
+        ap.error("--chaos needs --fps (failure injection lives on the "
                  "event engine's absolute clock)")
 
     cfg = reduced()
@@ -113,12 +127,34 @@ def main():
         else:
             ran = RanCell(policy=make_policy(args.policy),
                           cfg=RanConfig(tti_s=0.002))
+    chaos = None
+    if args.chaos:
+        from repro.core.channel import cupf_path
+        from repro.core.chaos import (ChaosConfig, ChaosModel, ChurnSpec,
+                                      OutageSpec)
+        # one of each fault, staggered across the run's horizon
+        horizon = args.frames / args.fps
+        chaos = ChaosModel(ChaosConfig(
+            edge_outage=OutageSpec(
+                schedule=((0.20 * horizon, 0.10 * horizon),)),
+            edge_policy="drop",
+            upf_outage=OutageSpec(
+                schedule=((0.45 * horizon, 0.15 * horizon),)),
+            failover=True, failover_path=cupf_path(),
+            blackout=OutageSpec(
+                schedule=((0.75 * horizon, 0.08 * horizon),)),
+            blackout_ues=(0,),
+            churn=ChurnSpec(initial_p=1.0, mean_on_s=0.5 * horizon,
+                            mean_off_s=0.15 * horizon),
+            heartbeat_period_s=0.01 * horizon,
+            heartbeat_timeout_s=0.025 * horizon))
     cell = CellSimulator(
         plan=SwinSplitPlan(cfg, params), system=system,
         codec=ActivationCodec(), controller=controller,
         n_ues=args.ues, seed=0, execute_model=True,
         batching=not args.no_batching, max_wait_s=30.0,
-        ran=ran, frame_budget_s=args.budget, mobility=mobility)
+        ran=ran, frame_budget_s=args.budget, mobility=mobility,
+        chaos=chaos)
 
     trace = cell_interference_traces(args.frames, args.ues, seed=1)
     if args.fps is not None:
@@ -185,6 +221,22 @@ def main():
         print(f"mobility ({args.speed:g} m/s): {st.n_handovers} handovers "
               f"across the cell (dUPF site 0 <-> cUPF site 1, A3 "
               f"hysteresis + TTT, queue migration on the absolute clock)")
+    if args.chaos:
+        print(f"chaos: {st.n_outages} injected outages, availability "
+              f"{st.availability:.3f} ({st.n_lost_edge} lost to the edge, "
+              f"{st.n_lost_path} to the dUPF, {st.n_absent} captures "
+              f"churned away)")
+        for m in res.recovery:
+            detect = ("--" if np.isnan(m.detect_s)
+                      else f"detected +{m.detect_s - m.start_s:.1f}s"
+                           f" ({m.action})")
+            reconv = ("" if m.reconverge_frames is None
+                      else f", reconverged in {m.reconverge_frames:.1f} "
+                           f"frames")
+            print(f"  {m.component:5s} outage {m.start_s:6.1f}-"
+                  f"{m.end_s:6.1f}s: {detect}, recovered in "
+                  f"{m.time_to_recover_s:.1f}s, lost {m.n_lost} "
+                  f"(burst {m.burst_len}){reconv}")
 
 
 if __name__ == "__main__":

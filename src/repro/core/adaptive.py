@@ -147,6 +147,24 @@ class AdaptiveController:
         self._granted_rate = None
         self._current = None
 
+    def notify_outage(self):
+        """An injected fault just cleared on this UE's serving path
+        (core/chaos.py): edge server back up, dUPF failover/fail-back, or
+        a link blackout ending.  Everything the controller learned
+        through the fault is suspect -- the granted-rate EWMA observed a
+        degraded (or rerouted) cell, and the drop/age EWMAs accumulated
+        losses the POST-recovery system will not reproduce.  Mirror
+        ``notify_handover`` (estimator reset + hysteresis clear) and
+        additionally zero the streaming EWMAs so the backoff does not pin
+        selection at ue_only long after the fault cleared; the next
+        decisions re-probe from the estimator's link-rate prediction.
+        Re-convergence speed is measured per outage
+        (``RecoveryMetrics.reconverge_frames``)."""
+        self._granted_rate = None
+        self._current = None
+        self._drop_ewma = 0.0
+        self._age_ewma = 0.0
+
     def relax_grant(self, link_rate_bps: float):
         """Called on frames the UE sent nothing uplink: with no grant to
         observe, the stale congestion estimate decays toward the idle link

@@ -200,6 +200,11 @@ class CellStats:
     ue_active_s: float = 0.0      # total UE compute-active wall time
     # mobility extensions (core/mobility.py; zero without a MobilityModel)
     n_handovers: int = 0          # serving-cell changes over the run
+    # chaos extensions (core/chaos.py; zero without a ChaosModel)
+    n_absent: int = 0             # captures skipped: UE churned out of the cell
+    n_lost_edge: int = 0          # frames lost to an edge outage (drop policy)
+    n_lost_path: int = 0          # frames lost in flight on a down user plane
+    n_outages: int = 0            # injected outage/blackout windows this run
 
     def absorb_slot(self, records: List[BatchRecord],
                     served: Dict[int, ServedTail]):
@@ -257,6 +262,16 @@ class CellStats:
             return 0.0
         return self.n_completed / self.wall_s / self.n_ues
 
+    @property
+    def availability(self) -> float:
+        """Fraction of admitted captures that reached a detection --
+        window-policy drops AND chaos losses count against it; absent
+        (churned-out) UEs' unproduced captures do not.  1.0 on a run
+        with nothing to serve."""
+        total = (self.n_completed + self.n_dropped
+                 + self.n_lost_edge + self.n_lost_path)
+        return self.n_completed / total if total else 1.0
+
 
 @dataclass
 class CellResult:
@@ -266,6 +281,9 @@ class CellResult:
     # per-UE wall-clock energy (event engine only: active/idle intervals
     # without the per-frame overlap double count; energy.interval_energy_j)
     ue_wall_energy_j: Optional[List[float]] = None
+    # per-outage-window recovery metrics (core/chaos.py RecoveryMetrics;
+    # None unless the run carried a ChaosModel)
+    recovery: Optional[List[Any]] = None
 
     def ue_logs(self, ue_id: int) -> List[FrameLog]:
         return [l for l in self.logs if l.ue_id == ue_id]
@@ -336,6 +354,13 @@ class CellSimulator:
     # (core/mobility.py).  Event-engine only: handover events live on the
     # absolute clock, so ``run``/``step`` refuse it.
     mobility: Optional[MobilityModel] = None
+    # failure injection & churn (core/chaos.py ChaosModel).  Event-engine
+    # only: outage windows, heartbeat ticks and churn intervals live on
+    # the absolute clock, so ``run``/``step`` refuse it.  A zero-chaos
+    # model (ChaosConfig with empty specs) replays a chaos-free run
+    # bitwise -- the schedule draws from a dedicated SeedSequence child
+    # appended at the END of the layout below.
+    chaos: Optional[Any] = None
     # MAC engine: "python" runs core/ran.py as-is; "vectorized" swaps the
     # TTI loops for the batched lax.scan kernels (core/ran_vec.py), which
     # replay the Python engine's grant traces, HARQ outcomes and reports
@@ -396,22 +421,28 @@ class CellSimulator:
         # stays aligned across policies (core/ran.py discipline); child
         # n_ues+1 is RESERVED for the event engine's capture jitter
         # (core/timeline.py spawns it itself); child n_ues+2 drives the
-        # mobility model's shadowing/Doppler draws; children n_ues+3.. are
-        # per-cell HARQ streams for the non-anchor cells of a MultiCell
-        # (cell 0 keeps the original HARQ stream, so a single-cell run is
-        # draw-for-draw the pre-mobility engine).
+        # mobility model's shadowing/Doppler draws; children n_ues+3..-2
+        # are per-cell HARQ streams for the non-anchor cells of a
+        # MultiCell (cell 0 keeps the original HARQ stream, so a
+        # single-cell run is draw-for-draw the pre-mobility engine); the
+        # LAST child is the chaos schedule's dedicated stream
+        # (core/chaos.py) -- always spawned (index-stable, unused draws
+        # are free) so attaching a ChaosModel never moves any other
+        # stream and a zero-chaos config replays chaos-free runs bitwise.
         n_extra_cells = self.ran.n_cells - 1 \
             if isinstance(self.ran, MultiCell) else 0
         seqs = np.random.SeedSequence(self.seed).spawn(
-            self.n_ues + 3 + n_extra_cells)
+            self.n_ues + 4 + n_extra_cells)
         self._ue_rngs = [np.random.default_rng(s) for s in seqs[:self.n_ues]]
         self._harq_rng = np.random.default_rng(seqs[self.n_ues])
         self._harq_rngs = [self._harq_rng] + [
-            np.random.default_rng(s) for s in seqs[self.n_ues + 3:]]
+            np.random.default_rng(s) for s in seqs[self.n_ues + 3:-1]]
         if self.mobility is not None:
             self.mobility.reset(self.n_ues,
                                 np.random.default_rng(seqs[self.n_ues + 2]),
                                 self.system.channel)
+        if self.chaos is not None:
+            self.chaos.reset(self.n_ues, seqs[-1])
         self._last_reports: Dict[int, GrantReport] = {}
         if self.ran is not None:
             self.ran.reset(self.n_ues)
@@ -439,11 +470,12 @@ class CellSimulator:
         """Advance every UE by one frame.  ``levels``: scalar or (n_ues,)
         interference; ``option``: fixed split for all UEs, or None to let
         each UE's cloned controller decide."""
-        if self.mobility is not None or isinstance(self.ran, MultiCell):
+        if self.mobility is not None or isinstance(self.ran, MultiCell) \
+                or self.chaos is not None:
             raise ValueError(
-                "mobility / multi-cell handover lives on the absolute "
-                "clock: use run_stream (core/timeline.py), not the "
-                "lock-step step/run engine")
+                "mobility / multi-cell handover / chaos injection lives "
+                "on the absolute clock: use run_stream "
+                "(core/timeline.py), not the lock-step step/run engine")
         if option is not None and option not in self._head_s:
             raise ValueError(f"unknown option {option!r}; "
                              f"plan offers {self.plan.options}")

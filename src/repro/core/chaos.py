@@ -1,0 +1,450 @@
+"""Chaos & churn: deterministic failure injection for the streaming cell.
+
+The paper's headline system claim is *runtime stability* on a live AI-RAN
+testbed; every engine before this module only ever simulated steady
+state.  This module layers four failure/churn axes on the continuous-time
+event engine (core/timeline.py):
+
+  * **UE churn** (``ChurnSpec``): UEs join and leave mid-run on
+    alternating exponential sojourns, with the arrival intensity shaped
+    by a diurnal sinusoid and scripted flash-crowd windows (a crowd
+    compresses the off-sojourns, so departures return faster).  Absent
+    UEs' captures are skipped silently -- no frame, no drop.
+  * **Edge-server outages** (``ChaosConfig.edge_outage``): the
+    ``EdgeQueue`` is unavailable inside the outage windows.  Policy
+    ``"requeue"`` defers any batch whose execution would overlap an
+    outage until recovery plus a warm-up penalty (cold caches, model
+    re-load); policy ``"drop"`` rejects requests *arriving* during the
+    outage -- the frame is lost (``drop_reason="edge_outage"``).
+  * **dUPF outage + failover** (``ChaosConfig.upf_outage``): frames
+    routed through the primary user-plane path while it is down are lost
+    in flight.  With ``failover=True`` the heartbeat detector reroutes
+    subsequent frames through ``failover_path`` (the cUPF backhaul,
+    reusing the mobility path-selection plumbing) and fails back once
+    the detector sees the primary recover.
+  * **Link blackouts** (``ChaosConfig.blackout``): per-UE rate -> 0
+    intervals.  At blackout start the UE's unfinished flows are parked
+    out of the MAC (``migrate_ue``, in-flight HARQ transport block
+    flushed as a loss -- the handover plumbing); at blackout end they
+    re-enter the serving cell's stream (``adopt``) and the backlog
+    drains, identically in the python and vectorized engines.
+
+**Detection is earned, not oracle.**  ``runtime/failures.py`` provides
+the control loop: a ``HeartbeatMonitor`` on the simulation's absolute
+clock (``strict_clock=True`` -- wall-clock defaults are refused) beats
+for every component that is actually up at each tick; ``decide_recovery``
+(fed a ``StragglerMonitor`` tracking real edge batch times and path
+latencies) turns missed beats into the failover state machine's
+transitions.  The engine therefore reacts at the *detection* instant
+(outage start + timeout + up to one period), not the ground-truth
+instant -- frames in flight before detection are the detection-latency
+cost.
+
+**Rng discipline.**  ``CellSimulator.reset`` hands the model ONE
+dedicated SeedSequence child (spawned at the END of the existing layout,
+so no earlier stream moves); ``reset`` sub-spawns one grandchild per
+chaos feature (edge / upf / blackout / churn) so enabling or tuning one
+feature never moves another's schedule.  Every spec draws a FIXED count
+(``OutageSpec.max_events`` exponential pairs; one uniform plus
+``ChurnSpec.max_toggles`` exponentials per UE) regardless of the
+configured rates, so a zero-rate ("zero-chaos") config consumes the same
+draws as a live one -- and, because the child is dedicated, a zero-chaos
+config replays the chaos-free engines **bitwise**
+(tests/test_chaos.py).
+
+Recovery metrics (``RecoveryMetrics``, surfaced as
+``CellResult.recovery``): detection latency, time-to-recover (outage
+start -> first completed frame after the outage end), dropped-frame
+burst length, losses attributed to the window, and controller
+re-convergence (decided frames after the outage until the pre-outage
+split option is re-selected).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.channel import PathModel, cupf_path
+from repro.runtime.failures import (HeartbeatMonitor, StragglerMonitor,
+                                    decide_recovery)
+
+# heartbeat worker ids: the edge inference server and the primary
+# user-plane function are the two monitored components
+EDGE_WORKER = 0
+UPF_WORKER = 1
+
+
+def _merge(windows: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    """Merge overlapping/touching (start, end) windows, sorted."""
+    out: List[Tuple[float, float]] = []
+    for a, b in sorted(windows):
+        if out and a <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], b))
+        else:
+            out.append((a, b))
+    return out
+
+
+def _inside(windows: Sequence[Tuple[float, float]], t: float) -> bool:
+    return any(a <= t < b for a, b in windows)
+
+
+@dataclass(frozen=True)
+class OutageSpec:
+    """When one component is down: an explicit ``schedule`` of
+    ``(start_s, duration_s)`` windows plus an optional stochastic
+    process (Poisson arrivals at ``rate_hz``, exponential durations with
+    mean ``mean_duration_s``).
+
+    Draw discipline: ``windows`` consumes exactly ``max_events``
+    gap/duration exponential pairs from its rng EVERY call, whatever the
+    rate -- so tuning the rate (including to zero) never changes the
+    draw count, and a spec left at its defaults schedules nothing while
+    keeping its dedicated stream's state deterministic."""
+    schedule: Tuple[Tuple[float, float], ...] = ()
+    rate_hz: float = 0.0
+    mean_duration_s: float = 0.0
+    max_events: int = 4
+
+    def windows(self, rng: np.random.Generator,
+                horizon_s: float) -> List[Tuple[float, float]]:
+        gaps = rng.standard_exponential(self.max_events)
+        durs = rng.standard_exponential(self.max_events)
+        out = [(float(a), float(a) + float(d)) for a, d in self.schedule]
+        if self.rate_hz > 0.0 and self.mean_duration_s > 0.0:
+            t = 0.0
+            for g, d in zip(gaps, durs):
+                t += float(g) / self.rate_hz
+                if t >= horizon_s:
+                    break
+                dur = float(d) * self.mean_duration_s
+                out.append((t, t + dur))
+                t += dur
+        return _merge(out)
+
+
+@dataclass(frozen=True)
+class ChurnSpec:
+    """UE admission/departure churn.  Each UE alternates exponential
+    present/absent sojourns (means ``mean_on_s`` / ``mean_off_s``; zero
+    means the current state is permanent).  The *arrival* intensity --
+    how fast absent UEs return -- is shaped by a diurnal sinusoid
+    (period/depth) and scripted ``flash_crowds`` windows
+    ``(start_s, duration_s, boost)``: intensity divides the off-sojourn,
+    so a flash crowd pulls the whole absent population back in.
+
+    Draw discipline: ``intervals`` consumes one uniform (initial
+    presence) plus ``max_toggles`` exponentials per UE, for EVERY UE,
+    whatever the means -- a no-churn config draws the same count."""
+    initial_p: float = 1.0
+    mean_on_s: float = 0.0
+    mean_off_s: float = 0.0
+    max_toggles: int = 8
+    diurnal_period_s: float = 0.0
+    diurnal_depth: float = 0.0
+    flash_crowds: Tuple[Tuple[float, float, float], ...] = ()
+
+    def intensity(self, t: float) -> float:
+        x = 1.0
+        if self.diurnal_period_s > 0.0:
+            x += self.diurnal_depth * math.sin(
+                2.0 * math.pi * t / self.diurnal_period_s)
+        for t0, dur, boost in self.flash_crowds:
+            if t0 <= t < t0 + dur:
+                x += boost
+        return max(x, 1e-6)
+
+    def intervals(self, rng: np.random.Generator, horizon_s: float,
+                  n_ues: int) -> List[List[Tuple[float, float]]]:
+        """Per-UE presence intervals over [0, horizon]."""
+        pres = rng.random(n_ues)
+        soj = rng.standard_exponential((n_ues, self.max_toggles))
+        out: List[List[Tuple[float, float]]] = []
+        for u in range(n_ues):
+            on = bool(pres[u] < self.initial_p)
+            t, start = 0.0, 0.0
+            iv: List[Tuple[float, float]] = []
+            for j in range(self.max_toggles):
+                if on:
+                    if self.mean_on_s <= 0.0:
+                        break                      # present forever
+                    t += float(soj[u, j]) * self.mean_on_s
+                    iv.append((start, t))
+                    on = False
+                else:
+                    if self.mean_off_s <= 0.0:
+                        break                      # absent forever
+                    t += (float(soj[u, j]) * self.mean_off_s
+                          / self.intensity(t))
+                    start, on = t, True
+                if t >= horizon_s:
+                    break
+            if on:
+                iv.append((start, math.inf))
+            out.append(iv)
+        return out
+
+
+@dataclass
+class ChaosConfig:
+    """What can fail, and how the cell reacts.
+
+    ``edge_policy``: ``"requeue"`` (batches overlapping an edge outage
+    re-execute after recovery + ``edge_warmup_s``) or ``"drop"``
+    (requests arriving during the outage are lost).  ``failover``
+    reroutes the user plane through ``failover_path`` while the
+    heartbeat detector believes the primary path is down.  The detector
+    ticks every ``heartbeat_period_s`` and declares a component dead
+    after ``heartbeat_timeout_s`` without a beat."""
+    edge_outage: Optional[OutageSpec] = None
+    upf_outage: Optional[OutageSpec] = None
+    blackout: Optional[OutageSpec] = None
+    blackout_ues: Optional[Sequence[int]] = None   # None = every UE
+    churn: Optional[ChurnSpec] = None
+    edge_policy: str = "requeue"
+    edge_warmup_s: float = 0.0
+    failover: bool = True
+    failover_path: PathModel = field(default_factory=cupf_path)
+    heartbeat_period_s: float = 0.5
+    heartbeat_timeout_s: float = 1.2
+
+    def __post_init__(self):
+        if self.edge_policy not in ("requeue", "drop"):
+            raise ValueError(f"unknown edge_policy {self.edge_policy!r}; "
+                             f"choose 'requeue' or 'drop'")
+
+
+@dataclass
+class RecoveryMetrics:
+    """Per-outage-window recovery record (CellResult.recovery)."""
+    component: str                 # 'edge' | 'upf' | 'link'
+    start_s: float
+    end_s: float
+    detect_s: float = float("nan")      # heartbeat declared it down
+    clear_s: float = float("nan")       # heartbeat saw it back up
+    action: str = ""                    # decide_recovery at detection
+    time_to_recover_s: float = float("nan")  # start -> first completion
+                                             # after the outage end
+    n_lost: int = 0                     # frames lost to this window
+    burst_len: int = 0                  # longest per-UE run of consecutive
+                                        # captures in-window with no detection
+    reconverge_frames: Optional[float] = None  # mean decided frames after
+                                               # end until the pre-outage
+                                               # option is re-selected
+
+
+class ChaosModel:
+    """Failure schedule + detector/failover state for one cell run.
+
+    ``reset(n_ues, seq)`` re-seeds from the simulator's dedicated
+    SeedSequence child; ``begin(horizon_s)`` draws the schedules and
+    returns the timeline's chaos events; ``heartbeat(t)`` runs one
+    detector tick and returns the transition signals the engine reacts
+    to; ``finalize(...)`` folds the run into ``RecoveryMetrics``."""
+
+    def __init__(self, cfg: Optional[ChaosConfig] = None):
+        self.cfg = cfg or ChaosConfig()
+
+    # -- seeding (CellSimulator.reset) ---------------------------------------
+    def reset(self, n_ues: int, seq: np.random.SeedSequence):
+        self.n_ues = n_ues
+        # one grandchild per feature: enabling/tuning one feature never
+        # moves another's schedule (index-stable sub-spawn)
+        kids = seq.spawn(4)
+        self._rngs = [np.random.default_rng(k) for k in kids]
+        self.edge_windows: List[Tuple[float, float]] = []
+        self.upf_windows: List[Tuple[float, float]] = []
+        self.blackout_windows: List[Tuple[float, float]] = []
+        self._churn_iv: Optional[List[List[Tuple[float, float]]]] = None
+        self.routed_failover = False
+        self.monitor = HeartbeatMonitor(
+            n_workers=2, timeout_s=self.cfg.heartbeat_timeout_s,
+            strict_clock=True)
+        self.straggler = StragglerMonitor(n_workers=2)
+        self.transitions: List[Dict[str, Any]] = []
+        self._down = {EDGE_WORKER: False, UPF_WORKER: False}
+
+    # -- schedule -------------------------------------------------------------
+    def begin(self, horizon_s: float) -> List[Tuple[float, str, Any]]:
+        """Draw the run's schedules and return the chaos events for the
+        event loop, sorted by time: ``(t, kind, payload)`` with kinds
+        ``heartbeat`` / ``blackout_start`` / ``blackout_end``."""
+        cfg = self.cfg
+        if cfg.edge_outage is not None:
+            self.edge_windows = cfg.edge_outage.windows(
+                self._rngs[0], horizon_s)
+        if cfg.upf_outage is not None:
+            self.upf_windows = cfg.upf_outage.windows(
+                self._rngs[1], horizon_s)
+        if cfg.blackout is not None:
+            self.blackout_windows = cfg.blackout.windows(
+                self._rngs[2], horizon_s)
+        if cfg.churn is not None:
+            self._churn_iv = cfg.churn.intervals(
+                self._rngs[3], horizon_s, self.n_ues)
+
+        ev: List[Tuple[float, str, Any]] = []
+        ues = tuple(range(self.n_ues)) if cfg.blackout_ues is None \
+            else tuple(sorted(cfg.blackout_ues))
+        for b0, b1 in self.blackout_windows:
+            ev.append((b0, "blackout_start", (ues, b1)))
+            ev.append((b1, "blackout_end", ues))
+        if cfg.edge_outage is not None or cfg.upf_outage is not None:
+            # the detector must keep ticking past the last outage end (+
+            # timeout) or recovery would never be *detected*
+            last = max([horizon_s]
+                       + [w[1] for w in self.edge_windows]
+                       + [w[1] for w in self.upf_windows])
+            p = cfg.heartbeat_period_s
+            n_ticks = int(math.floor(
+                (last + cfg.heartbeat_timeout_s) / p)) + 2
+            ev.extend((j * p, "heartbeat", None) for j in range(n_ticks))
+        ev.sort(key=lambda e: e[0])
+        return ev
+
+    # -- ground truth ---------------------------------------------------------
+    def edge_down(self, t: float) -> bool:
+        return _inside(self.edge_windows, t)
+
+    def upf_down(self, t: float) -> bool:
+        return _inside(self.upf_windows, t)
+
+    def active(self, u: int, t: float) -> bool:
+        """Is UE ``u`` present (churn) at absolute time ``t``?"""
+        if self._churn_iv is None:
+            return True
+        return any(a <= t < b for a, b in self._churn_iv[u])
+
+    # -- detection / failover state machine ----------------------------------
+    def heartbeat(self, t: float) -> List[str]:
+        """One detector tick on the absolute clock: every component that
+        is actually up beats; ``HeartbeatMonitor`` + ``decide_recovery``
+        turn missed beats into transitions.  Returns the signals the
+        engine reacts to: ``failover`` / ``failback`` / ``edge_up`` (the
+        re-probe triggers) plus ``{edge,upf}_{down,up}`` markers."""
+        if not self.edge_down(t):
+            self.monitor.beat(EDGE_WORKER, now=t)
+        if not self.upf_down(t):
+            self.monitor.beat(UPF_WORKER, now=t)
+        dec = decide_recovery(self.monitor, self.straggler,
+                              devices_per_host=1, model_parallel=1,
+                              last_ckpt_step=None, now=t)
+        dead = set(self.monitor.dead(now=t))
+        out: List[str] = []
+        for w, name in ((EDGE_WORKER, "edge"), (UPF_WORKER, "upf")):
+            down = w in dead
+            if down and not self._down[w]:
+                self._down[w] = True
+                self.transitions.append({"t": t, "component": name,
+                                         "event": "down",
+                                         "action": dec.action})
+                if w == UPF_WORKER and self.cfg.failover \
+                        and dec.action != "halt":
+                    self.routed_failover = True
+                    out.append("failover")
+                out.append(f"{name}_down")
+            elif not down and self._down[w]:
+                self._down[w] = False
+                self.transitions.append({"t": t, "component": name,
+                                         "event": "up",
+                                         "action": dec.action})
+                if w == UPF_WORKER and self.routed_failover:
+                    self.routed_failover = False
+                    out.append("failback")
+                out.append(f"{name}_up")
+        return out
+
+    # -- recovery metrics -----------------------------------------------------
+    def finalize(self, frames: Sequence[Any],
+                 skips: Sequence[Tuple[int, int, float]]
+                 ) -> List[RecoveryMetrics]:
+        """Fold one finished run into per-window recovery metrics.
+
+        ``frames`` are the engine's admitted per-frame records (duck
+        typed: ``ue``/``idx``/``capture_s``/``done_s``/``drop_reason``/
+        ``option``/``pred``); ``skips`` are the window-dropped captures
+        as ``(ue, frame_idx, capture_s)``."""
+        reason = {"edge": "edge_outage", "upf": "upf_outage"}
+        out: List[RecoveryMetrics] = []
+        for comp, windows in (("edge", self.edge_windows),
+                              ("upf", self.upf_windows),
+                              ("link", self.blackout_windows)):
+            for t0, t1 in windows:
+                m = RecoveryMetrics(component=comp, start_s=t0, end_s=t1)
+                slack = (self.cfg.heartbeat_timeout_s
+                         + 2.0 * self.cfg.heartbeat_period_s)
+                for tr in self.transitions:
+                    if tr["component"] != comp:
+                        continue
+                    if tr["event"] == "down" and math.isnan(m.detect_s) \
+                            and t0 <= tr["t"] <= t1 + slack:
+                        m.detect_s = tr["t"]
+                        m.action = tr["action"]
+                    if tr["event"] == "up" and math.isnan(m.clear_s) \
+                            and tr["t"] >= t1:
+                        m.clear_s = tr["t"]
+                done = [fr for fr in frames if not fr.drop_reason]
+                after = [fr.done_s for fr in done if fr.done_s >= t1]
+                if after:
+                    m.time_to_recover_s = min(after) - t0
+                if comp in reason:
+                    m.n_lost = sum(
+                        1 for fr in frames
+                        if fr.drop_reason == reason[comp]
+                        and t0 <= fr.done_s <= t1 + self.cfg.edge_warmup_s)
+                m.burst_len = self._burst(frames, skips, t0, t1)
+                m.reconverge_frames = self._reconverge(frames, t0, t1)
+                out.append(m)
+        out.sort(key=lambda m: (m.start_s, m.component))
+        return out
+
+    def _burst(self, frames, skips, t0: float, t1: float) -> int:
+        """Longest per-UE run of consecutive frame indices lost or
+        skipped to this window.  A backlogged cell loses frames that
+        were CAPTURED long before the outage opened, so losses are
+        attributed by when they happened (done_s for lost frames), not
+        by capture time."""
+        hi = t1 + self.cfg.edge_warmup_s
+        per: Dict[int, List[Tuple[int, bool]]] = {}
+        for fr in frames:
+            lost_here = bool(fr.drop_reason) and t0 <= fr.done_s <= hi
+            per.setdefault(fr.ue, []).append((fr.idx, not lost_here))
+        for u, k, cap in skips:
+            if t0 <= cap <= hi:
+                per.setdefault(u, []).append((k, False))
+        best = 0
+        for rows in per.values():
+            rows.sort()
+            run = 0
+            for _k, ok in rows:
+                run = 0 if ok else run + 1
+                best = max(best, run)
+        return best
+
+    def _reconverge(self, frames, t0: float, t1: float
+                    ) -> Optional[float]:
+        """Mean decided frames after the outage end until the pre-outage
+        split option is re-selected (None for fixed-option runs or when
+        no UE had a pre-outage decision)."""
+        decided = [fr for fr in frames if fr.pred is not None]
+        if not decided:
+            return None
+        per_ue: List[int] = []
+        for u in sorted({fr.ue for fr in decided}):
+            mine = sorted((fr for fr in decided if fr.ue == u),
+                          key=lambda fr: fr.capture_s)
+            pre = [fr.option for fr in mine if fr.capture_s < t0]
+            if not pre:
+                continue
+            target, cnt = pre[-1], 0
+            for fr in mine:
+                if fr.capture_s < t1:
+                    continue
+                cnt += 1
+                if fr.option == target:
+                    per_ue.append(cnt)
+                    break
+        return float(np.mean(per_ue)) if per_ue else None

@@ -89,6 +89,10 @@ class FrameLog:
     # mobility extensions (core/mobility.py; defaults = one eternal cell)
     serving_cell: int = 0       # cell serving the UE at capture
     handover_count: int = 0     # UE's cumulative handovers at capture
+    # chaos extensions (core/chaos.py; default = no failure injection).
+    # Set on frames LOST to an injected fault ("edge_outage"/"upf_outage")
+    # as opposed to window-policy drops, which keep drop_reason "".
+    drop_reason: str = ""
 
     @property
     def energy_j(self) -> float:
@@ -269,7 +273,9 @@ def account_stage(system: Calibrated, option: str, interference_db: float,
                   frame_idx: int = 0,
                   age_s: Optional[float] = None,
                   serving_cell: int = 0,
-                  handover_count: int = 0) -> FrameLog:
+                  handover_count: int = 0,
+                  dropped: bool = False,
+                  drop_reason: str = "") -> FrameLog:
     """Fold stage timings into delay + energy, paper §V style.
 
     The UE power analyzer integrates over the whole frame interval: active
@@ -310,7 +316,8 @@ def account_stage(system: Calibrated, option: str, interference_db: float,
                     frame_idx=frame_idx, capture_s=capture_s,
                     age_s=delay_s if age_s is None else age_s,
                     serving_cell=serving_cell,
-                    handover_count=handover_count)
+                    handover_count=handover_count,
+                    dropped=dropped, drop_reason=drop_reason)
 
 
 # ---------------------------------------------------------------------------

@@ -69,6 +69,7 @@ import numpy as np
 
 from repro.core.cell import (BatchRecord, CellResult, CellSimulator,
                              ServedTail, TailBatcher, TailRequest)
+from repro.core.chaos import EDGE_WORKER, UPF_WORKER
 from repro.core.channel import sample_path_latencies
 from repro.core.energy import interval_energy_j
 from repro.core.pipeline import (EncodeResult, FrameLog, FrameSource,
@@ -98,16 +99,34 @@ class EdgeQueue:
     members arrived, or the batching window has fully elapsed, so no
     not-yet-seen arrival can still join.  Batches still inside their
     window stay pending (the causal batcher is still waiting for them).
+
+    Failure injection (core/chaos.py): ``outages`` are absolute
+    (start, end) windows during which the edge server is down.  Policy
+    ``drop=True`` rejects requests *arriving* inside a window (``add``
+    returns False; the engine logs the frame lost); ``drop=False``
+    re-queues -- batches whose execution would overlap an outage are
+    deferred to the window's end plus ``warmup_s`` (cold caches / model
+    re-load on recovery).  Empty ``outages`` leaves every code path
+    bitwise identical to the pre-chaos queue.
     """
 
-    def __init__(self, batcher: TailBatcher):
+    def __init__(self, batcher: TailBatcher, *,
+                 outages: Sequence[Tuple[float, float]] = (),
+                 warmup_s: float = 0.0, drop: bool = False):
         self.b = batcher
         self.edge_free = 0.0
+        self.outages = sorted(outages)
+        self.warmup_s = warmup_s
+        self.drop = drop
         self._pending: Dict[str, List[TailRequest]] = {}
 
-    def add(self, req: TailRequest):
+    def add(self, req: TailRequest) -> bool:
+        if self.drop and any(a <= req.arrival_s < b
+                             for a, b in self.outages):
+            return False
         group = self._pending.setdefault(req.option, [])
         insort(group, req, key=lambda r: (r.arrival_s, r.ue_id))
+        return True
 
     def _next_batch(self, group: List[TailRequest], watermark: float
                     ) -> Optional[List[TailRequest]]:
@@ -149,9 +168,16 @@ class EdgeQueue:
         for _, _, opt, batch in ready:
             padded = self.b._bucket(len(batch)) if self.b.batching \
                 else len(batch)
-            start = max(batch[-1].arrival_s, self.edge_free)
             compute_s = self.b.edge.batch_compute_time_s(
                 self.b.plan.tail_flops(opt), padded)
+            start = max(batch[-1].arrival_s, self.edge_free)
+            for o0, o1 in self.outages:
+                # requeue policy: execution may not overlap an outage --
+                # defer to recovery + warm-up.  Windows are sorted and
+                # each push only increases start, so one forward pass
+                # lands on the first feasible gap.
+                if start + compute_s > o0 and start < o1 + self.warmup_s:
+                    start = o1 + self.warmup_s
             outs: List[Any] = [None] * len(batch)
             if self.b.execute_model:
                 outs = self.b.plan.tail_batched(
@@ -206,6 +232,9 @@ class _Frame:
     serving_cell: int = 0         # serving cell at capture
     ho_count: int = 0             # UE's cumulative handovers at capture
     rate_scale: float = 1.0       # mobility rate multiplier this frame
+    # chaos (core/chaos.py; defaults = nothing ever fails)
+    drop_reason: str = ""         # set when an injected fault ate the frame
+    routed_primary: bool = True   # False: rode the failover (cUPF) path
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +305,14 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
     captures = _capture_times(n, n_frames, fps, jitter_s, jit_rng)
     src = FrameSource(imgs if sim.execute_model else None)
     mob = sim.mobility
+    # chaos schedule: drawn NOW from its dedicated end-of-layout rng
+    # child (cell.py reset), so the shared fading/path/jitter streams
+    # above never move whether or not a ChaosModel rides along
+    chaos = sim.chaos
+    chaos_events: List[Tuple[float, str, Any]] = []
+    if chaos is not None:
+        chaos_events = chaos.begin(
+            float(captures.max()) if captures.size else 0.0)
     if sim.ran is None:
         streams, harq_rngs = None, []
     else:
@@ -293,7 +330,11 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
         # draw from their own dedicated children (cell.py reset)
         harq_rngs = sim._harq_rngs
         assert len(harq_rngs) == len(streams)
-    edge = EdgeQueue(sim.batcher)
+    edge = EdgeQueue(
+        sim.batcher,
+        outages=chaos.edge_windows if chaos is not None else (),
+        warmup_s=chaos.cfg.edge_warmup_s if chaos is not None else 0.0,
+        drop=chaos is not None and chaos.cfg.edge_policy == "drop")
     controllers = sim._controllers
     if controllers is not None:
         for u, c in enumerate(controllers):
@@ -301,9 +342,17 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
 
     # rounds: captures grouped by identical absolute instant.  Degenerate
     # (uniform fps, zero jitter) every round is all n UEs at k/fps --
-    # exactly one lock-step slot, in the same UE order.
-    events = sorted((captures[u][k], k, u)
-                    for u in range(n) for k in range(n_frames))
+    # exactly one lock-step slot, in the same UE order.  Chaos events
+    # (heartbeat ticks, blackout edges) merge onto the same timeline at
+    # rank 0, so at an equal instant they act before the captures they
+    # gate; capture rounds themselves are untouched (the group is
+    # re-sorted below exactly as before).
+    events: List[Tuple[float, int, str, Any, Any]] = [
+        (captures[u][k], 1, "cap", u, k)
+        for u in range(n) for k in range(n_frames)]
+    events.extend((tc, 0, kind, payload, None)
+                  for tc, kind, payload in chaos_events)
+    events.sort(key=lambda e: (e[0], e[1]))
     frames: List[_Frame] = []
     dropped_logs: List[FrameLog] = []
     launched = np.zeros(n, int)
@@ -314,16 +363,35 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
     outcome: List[Any] = [None] * n    # last delivered grant report
     gap_until = np.zeros(n)        # uplink stalled until (path relocation)
     mob_obs: List[Any] = [None] * n    # latest MobilityObs per UE
+    parked: List[List[Any]] = [[] for _ in range(n)]   # blackout-parked flows
     cohort = 0
 
     by_req: Dict[int, _Frame] = {}
+
+    def lose(fr: _Frame, t_loss: float, reason: str):
+        """An injected fault destroyed this frame: final, counted against
+        availability, its in-flight window slot freed at the loss
+        instant.  The UE sees it exactly like a window drop (no
+        detection arrived)."""
+        fr.final = True
+        fr.done_s = t_loss
+        fr.drop_reason = reason
+        done_times[fr.ue].append(t_loss)
+        if reason == "edge_outage":
+            sim.stats.n_lost_edge += 1
+        else:
+            sim.stats.n_lost_path += 1
+        if controllers is not None:
+            controllers[fr.ue].observe_stream(0.0, True)
 
     def submit(fr: _Frame):
         """Hand an arrived payload to the edge event queue."""
         req = TailRequest(ue_id=fr.ue, option=fr.option,
                           arrival_s=fr.arrival_s, payload=fr.enc.payload)
+        if not edge.add(req):
+            lose(fr, fr.arrival_s, "edge_outage")   # arrived mid-outage
+            return
         by_req[id(req)] = fr
-        edge.add(req)
 
     def deliver(flows, strm):
         """MAC completions -> grant feedback + edge arrivals.  ``tx_s``
@@ -345,11 +413,21 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
             outcome[fr.ue] = rep
             if controllers is not None:
                 controllers[fr.ue].observe_grant(fr.rate_bps)
+            if chaos is not None:
+                chaos.straggler.record(UPF_WORKER, fr.path_s)
+                # the radio delivered, but the frame still has to cross
+                # the user plane: a primary-routed packet entering a down
+                # dUPF is lost in flight (failover-routed ones are not)
+                if fr.routed_primary and chaos.upf_down(float(rep.finish_s)):
+                    lose(fr, float(rep.finish_s), "upf_outage")
+                    continue
             submit(fr)
 
     def serve(batches):
         """Edge executions -> frame completions."""
         for rec, served in batches:
+            if chaos is not None:
+                chaos.straggler.record(EDGE_WORKER, rec.compute_s)
             sim.stats.absorb_batch(rec, [s for _, s in served])
             for req, sv in served:
                 fr = by_req.pop(id(req))
@@ -374,16 +452,69 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
         assert t >= prev_t, "event timeline went backwards"
         prev_t = t
         group = []
+        chaos_here: List[Tuple[str, Any]] = []
         while i < len(events) and events[i][0] == t:
-            group.append((events[i][2], events[i][1]))   # (ue, frame idx)
+            _t, _rank, kind, a, b = events[i]
+            if kind == "cap":
+                group.append((a, b))                     # (ue, frame idx)
+            else:
+                chaos_here.append((kind, a))
             i += 1
         group.sort()
-        # 1. advance the MACs and the edge to the capture instant, so the
-        #    in-flight window sees every completion up to now
+        # 1. advance the MACs and the edge to the event instant, so the
+        #    in-flight window sees every completion up to now.  (For a
+        #    chaos tick between captures this split advance executes the
+        #    identical absolute-TTI sequence and draws the full advance
+        #    would -- flush membership is monotone in the watermark -- so
+        #    an inert chaos schedule stays bitwise.)
         if streams is not None:
             for s, hr in zip(streams, harq_rngs):
                 deliver(s.advance(t, hr), s)
         serve(edge.flush(t))
+
+        # 1a. chaos events at this instant fire BEFORE the captures they
+        #     gate.  Heartbeats run the detector (runtime/failures.py) on
+        #     the absolute clock: detection transitions drive the
+        #     failover state machine and the controllers' re-probe.
+        #     Blackout edges ride the handover plumbing: park the UE's
+        #     flows out of the MAC at rate->0, adopt them back at
+        #     recovery so the backlog drains.
+        for kind, payload in chaos_here:
+            if kind == "heartbeat":
+                for sig in chaos.heartbeat(t):
+                    if sig in ("failover", "failback", "edge_up") \
+                            and controllers is not None:
+                        # the serving topology just changed under every
+                        # UE: grant/stream estimates describe the FAULTED
+                        # system -- reset and re-probe (notify_handover's
+                        # discipline, plus the streaming EWMAs)
+                        for c in controllers:
+                            c.notify_outage()
+            elif kind == "blackout_start":
+                b_ues, b1 = payload
+                for u in b_ues:
+                    gap_until[u] = max(gap_until[u], b1)
+                    if streams is not None:
+                        serv = int(mob.serving[u]) if mob is not None else 0
+                        fls = streams[serv].migrate_ue(u)
+                        for fl in fls:
+                            if fl.granted > fl.granted_at_admit:
+                                fl.n_retx += 1   # in-flight TB lost
+                        parked[u].extend(fls)
+                    else:
+                        radio_free[u] = max(radio_free[u], b1)
+            elif kind == "blackout_end":
+                for u in payload:
+                    if streams is not None:
+                        serv = int(mob.serving[u]) if mob is not None else 0
+                        for fl in parked[u]:
+                            streams[serv].adopt(
+                                fl, max(fl.req.enqueue_s, t), cohort)
+                        parked[u] = []
+                    if controllers is not None:
+                        controllers[u].notify_outage()
+        if not group:
+            continue
 
         # 1b. mobility: advance trajectories/shadowing to the capture
         #     instant and evaluate A3 (handover events live on THIS
@@ -394,6 +525,8 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
         #     estimate resets (it described the OLD cell's load).
         if mob is not None:
             for u, _k in group:
+                if chaos is not None and not chaos.active(u, t):
+                    continue     # churned out: no trajectory draws either
                 obs = mob.observe(u, t)
                 mob_obs[u] = obs
                 ev = obs.handover
@@ -413,9 +546,14 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
                 if controllers is not None:
                     controllers[u].notify_handover()
 
-        # 2. admission: skip when the in-flight window is full
+        # 2. admission: absent (churned-out) UEs produce no frame at all
+        #    -- the camera is not in the cell -- then skip when the
+        #    in-flight window is full
         admitted: List[_Frame] = []
         for u, k in group:
+            if chaos is not None and not chaos.active(u, t):
+                sim.stats.n_absent += 1
+                continue
             serv = int(mob.serving[u]) if mob is not None else 0
             hoc = int(mob.handover_count[u]) if mob is not None else 0
             n_done = sum(1 for d in done_times[u] if d <= t + 1e-12)
@@ -454,11 +592,18 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
                     sim._ue_rngs[fr.ue],
                     grant_share=None if rep is None else rep.prb_share,
                     buffer_bytes=None if rep is None else float(rep.n_bytes))
+                # during failover the controller predicts with the path
+                # frames will actually ride (the cUPF's base latency),
+                # so selection can trade the split against the detour
+                if chaos is not None and chaos.routed_failover:
+                    dpath = chaos.cfg.failover_path
+                elif mob is not None:
+                    dpath = mob.serving_path(fr.ue)
+                else:
+                    dpath = sim.path
                 fr.pred = decide_stage(
                     controllers[fr.ue], kpm, spec, sim.plan.options,
-                    fr.level,
-                    mob.serving_path(fr.ue) if mob is not None
-                    else sim.path)
+                    fr.level, dpath)
                 fr.option = fr.pred.option
             else:
                 fr.option = option
@@ -511,18 +656,28 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
         link = np.atleast_1d(np.asarray(link, float))
         offload = np.array([fr.offload for fr in admitted])
         m = len(admitted)
+        # failover routing (core/chaos.py): while the heartbeat detector
+        # believes the primary dUPF is down, every new uplink rides the
+        # failover (cUPF) path instead.  Path draws keep the identical
+        # fixed per-index draw structure whatever the PathModel, so the
+        # shared stream stays rng-paired across failover on/off runs.
+        failover_now = chaos is not None and chaos.routed_failover
         if mob is not None:
             scale = np.array([fr.rate_scale for fr in admitted])
             link = np.maximum(link * scale, sim.system.channel.min_rate)
-            ppaths = [mob.sites[fr.serving_cell].path for fr in admitted]
+            ppaths = [chaos.cfg.failover_path if failover_now
+                      else mob.sites[fr.serving_cell].path
+                      for fr in admitted]
             path = np.where(offload,
                             sample_path_latencies(ppaths, sim._rng, m), 0.0)
         else:
+            p = chaos.cfg.failover_path if failover_now else sim.path
             path = np.where(offload,
-                            sim.path.sample_latency(sim._rng, size=m), 0.0)
+                            p.sample_latency(sim._rng, size=m), 0.0)
         for j, fr in enumerate(admitted):
             fr.rate_bps = float(link[j])
             fr.path_s = float(path[j])
+            fr.routed_primary = not failover_now
         if streams is None:
             # per-UE serial radio: frame N+1's transmission queues behind
             # frame N's -- the isolated link's cross-frame carry-over
@@ -536,6 +691,12 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
                 fr.air_s, fr.tx_s = air, wait + air
                 radio_free[fr.ue] = fr.enq_s + fr.tx_s
                 fr.arrival_s = fr.enq_s + fr.tx_s + fr.path_s
+                if chaos is not None:
+                    chaos.straggler.record(UPF_WORKER, fr.path_s)
+                    if fr.routed_primary \
+                            and chaos.upf_down(fr.enq_s + fr.tx_s):
+                        lose(fr, fr.enq_s + fr.tx_s, "upf_outage")
+                        continue
                 submit(fr)
         else:
             for j, fr in enumerate(admitted):
@@ -553,7 +714,11 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
                 if fr.offload:
                     # offloading nothing over the air (degenerate payload)
                     fr.arrival_s = fr.enq_s + fr.path_s
-                    submit(fr)
+                    if chaos is not None and fr.routed_primary \
+                            and chaos.upf_down(fr.enq_s):
+                        lose(fr, fr.enq_s, "upf_outage")
+                    else:
+                        submit(fr)
                 # frames that put nothing on the air cannot see the cell
                 # load; the stale granted-rate estimate relaxes toward the
                 # idle link rate (the lock-step slot's discipline)
@@ -592,15 +757,19 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
             air_s=fr.air_s, extra_wait_s=fr.pre_wait_s,
             capture_s=fr.capture_s, frame_idx=fr.idx,
             age_s=fr.done_s - fr.capture_s,
-            serving_cell=fr.serving_cell, handover_count=fr.ho_count))
+            serving_cell=fr.serving_cell, handover_count=fr.ho_count,
+            dropped=bool(fr.drop_reason), drop_reason=fr.drop_reason))
     logs.extend(dropped_logs)
     logs.sort(key=lambda l: (l.frame_idx, l.ue_id))
 
     st = sim.stats
     st.n_frames = n_frames
     st.n_ues = n
-    st.n_completed = len(frames)
-    st.age_sum_s = float(sum(fr.done_s - fr.capture_s for fr in frames))
+    # chaos-lost frames were admitted but never produced a detection:
+    # they count against availability, not as completions
+    done = [fr for fr in frames if not fr.drop_reason]
+    st.n_completed = len(done)
+    st.age_sum_s = float(sum(fr.done_s - fr.capture_s for fr in done))
     first_capture = float(captures.min()) if captures.size else 0.0
     last_capture = float(captures.max()) if captures.size else 0.0
     # the observed horizon spans through the last capture even when the
@@ -624,10 +793,17 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
                  for fr in mine)
         ue_energy.append(float(e))
 
+    recovery = None
+    if chaos is not None:
+        skips = [(l.ue_id, l.frame_idx, l.capture_s) for l in dropped_logs]
+        recovery = chaos.finalize(frames, skips)
+        st.n_outages = (len(chaos.edge_windows) + len(chaos.upf_windows)
+                        + len(chaos.blackout_windows))
+
     outputs = None
     if keep_outputs:
         outputs = [dict() for _ in range(n_frames)]
         for fr in frames:
             outputs[fr.idx][fr.ue] = fr.out
     return CellResult(logs=logs, stats=st, outputs=outputs,
-                      ue_wall_energy_j=ue_energy)
+                      ue_wall_energy_j=ue_energy, recovery=recovery)

@@ -17,16 +17,34 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 @dataclass
 class HeartbeatMonitor:
-    """Declares a worker dead after ``timeout_s`` without a heartbeat."""
+    """Declares a worker dead after ``timeout_s`` without a heartbeat.
+
+    Clock discipline: ``now`` defaults to wall-clock ``time.monotonic()``
+    for the live control plane, which is NONDETERMINISTIC inside a
+    simulation -- two replays of the same seeded trace would disagree on
+    detection instants.  Simulated users (core/chaos.py) construct the
+    monitor with ``strict_clock=True``, which refuses any call that does
+    not thread an explicit ``now`` on the simulation's absolute clock."""
     n_workers: int
     timeout_s: float = 10.0
+    strict_clock: bool = False
     _last: Dict[int, float] = field(default_factory=dict)
 
+    def _now(self, now: Optional[float]) -> float:
+        if now is not None:
+            return now
+        if self.strict_clock:
+            raise ValueError(
+                "HeartbeatMonitor(strict_clock=True) requires an explicit "
+                "`now`: wall-clock time.monotonic() is nondeterministic "
+                "on the simulated path")
+        return time.monotonic()
+
     def beat(self, worker: int, now: Optional[float] = None):
-        self._last[worker] = now if now is not None else time.monotonic()
+        self._last[worker] = self._now(now)
 
     def dead(self, now: Optional[float] = None) -> List[int]:
-        now = now if now is not None else time.monotonic()
+        now = self._now(now)
         out = []
         for w in range(self.n_workers):
             t = self._last.get(w)
@@ -35,8 +53,18 @@ class HeartbeatMonitor:
         return out
 
     def alive(self, now: Optional[float] = None) -> List[int]:
-        d = set(self.dead(now))
+        d = set(self.dead(self._now(now)))
         return [w for w in range(self.n_workers) if w not in d]
+
+
+def _median(xs: Sequence[float]) -> float:
+    """Proper median: mean of the two middles for even-length samples.
+    (The old ``sorted(xs)[len(xs) // 2]`` took the UPPER middle, biasing
+    the rolling median high on even windows -- a straggler threshold off
+    an inflated median under-flags slow hosts.)"""
+    s = sorted(xs)
+    m = len(s) // 2
+    return float(s[m]) if len(s) % 2 else 0.5 * (s[m - 1] + s[m])
 
 
 @dataclass
@@ -57,17 +85,13 @@ class StragglerMonitor:
             h.pop(0)
 
     def medians(self) -> Dict[int, float]:
-        out = {}
-        for w, h in self._hist.items():
-            s = sorted(h)
-            out[w] = s[len(s) // 2]
-        return out
+        return {w: _median(h) for w, h in self._hist.items()}
 
     def stragglers(self) -> List[int]:
         med = self.medians()
         if len(med) < 2:
             return []
-        global_med = sorted(med.values())[len(med) // 2]
+        global_med = _median(list(med.values()))
         return [w for w, m in med.items() if m > self.factor * global_med]
 
 

@@ -1,0 +1,384 @@
+"""Chaos & churn subsystem tests (core/chaos.py + the timeline wiring).
+
+The acceptance bar, in order of importance:
+
+  * **Zero-chaos bitwise replay** -- a ChaosModel whose every spec is
+    inert (empty schedules, zero rates, permanent UEs) attached to the
+    streaming engines reproduces the chaos-free runs FIELD-EXACT, for
+    the legacy radio, the python MAC and the vectorized MAC, fixed and
+    adaptive.  This pins the whole rng discipline: the chaos schedule
+    draws only from its dedicated end-of-layout SeedSequence child, the
+    heartbeat ticks' intermediate MAC/edge advances are neutral, and
+    the failover path plumbing leaves the shared draw stream untouched.
+  * Edge outages: requeue defers (nothing lost), drop loses exactly the
+    in-window arrivals, warm-up extends time-to-recover monotonically.
+  * dUPF failover: detection within heartbeat bounds, failover keeps
+    the stream alive (availability strictly above the no-failover run
+    under identical seeds), fail-back restores the primary path.
+  * Blackouts: python and vectorized MACs stay field-exact through
+    park/adopt, and the backlog fully drains.
+  * Churn: every scheduled capture is accounted exactly once
+    (completed + dropped + lost + absent).
+"""
+import dataclasses
+import math
+from functools import lru_cache
+
+import numpy as np
+import pytest
+
+from repro.configs.swin_t_detection import CONFIG as SWIN_FULL
+from repro.core import calibration as C
+from repro.core.adaptive import (DEFAULT_PRIVACY_PROFILE, AdaptiveController,
+                                 Objective)
+from repro.core.cell import CellSimulator
+from repro.core.channel import cupf_path, dupf_path
+from repro.core.chaos import (ChaosConfig, ChaosModel, ChurnSpec, OutageSpec,
+                              RecoveryMetrics)
+from repro.core.pipeline import FrameLog
+from repro.core.ran import RanCell, RanConfig, make_policy
+from repro.core.splitting import SwinSplitPlan
+from repro.core.throughput import ConstantRateEstimator
+
+FIELDS = tuple(f.name for f in dataclasses.fields(FrameLog)
+               if f.name != "predicted")
+
+
+@lru_cache(maxsize=1)
+def _system():
+    return C.calibrate()
+
+
+def _plan():
+    return SwinSplitPlan(SWIN_FULL, params=None)
+
+
+def _controller():
+    system = _system()
+    return AdaptiveController(
+        system=system, estimator=ConstantRateEstimator(50e6),
+        objective=Objective(w_delay=1.0, w_energy=0.5, w_privacy=2.5),
+        path=dupf_path(), privacy_profile=dict(DEFAULT_PRIVACY_PROFILE))
+
+
+def _sim(chaos=None, *, ran=False, engine="python", adaptive=False,
+         n_ues=3, seed=11):
+    return CellSimulator(
+        plan=_plan(), system=_system(), n_ues=n_ues, seed=seed,
+        execute_model=False, frame_budget_s=3.0,
+        controller=_controller() if adaptive else None,
+        ran=RanCell(policy=make_policy("edf"),
+                    cfg=RanConfig(tti_s=0.005)) if ran else None,
+        engine=engine, chaos=chaos)
+
+
+def _trace(n_frames=4, n_ues=3, level=-40.0):
+    return np.full((n_frames, n_ues), level)
+
+
+def _inert_chaos():
+    """Every feature present but scheduling nothing: heartbeat ticks run,
+    churn intervals are drawn, yet no window ever opens and no UE ever
+    leaves -- the config the bitwise test replays against chaos=None."""
+    return ChaosModel(ChaosConfig(
+        edge_outage=OutageSpec(), upf_outage=OutageSpec(),
+        blackout=OutageSpec(), churn=ChurnSpec()))
+
+
+def _rows(res):
+    return [[getattr(l, f) for f in FIELDS] for l in res.logs]
+
+
+# ---------------------------------------------------------------------------
+# the tentpole guarantee: zero-chaos == no-chaos, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine,ran", [("python", False),
+                                        ("python", True),
+                                        ("vectorized", True)])
+@pytest.mark.parametrize("adaptive", [False, True])
+def test_zero_chaos_replays_bitwise(engine, ran, adaptive):
+    trace = np.array([[-40.0, -30.0, -20.0], [-20.0, -10.0, -5.0],
+                      [-5.0, -20.0, -40.0], [-30.0, -40.0, -10.0]])
+    kw = dict(fps=0.4, jitter_s=0.05, inflight=2, budget_s=3.0)
+    opt = None if adaptive else "split3"
+    base = _sim(None, ran=ran, engine=engine,
+                adaptive=adaptive).run_stream(trace, option=opt, **kw)
+    chaotic = _sim(_inert_chaos(), ran=ran, engine=engine,
+                   adaptive=adaptive).run_stream(trace, option=opt, **kw)
+    assert _rows(base) == _rows(chaotic)
+    assert chaotic.stats.n_outages == 0
+    assert chaotic.recovery == []
+    assert chaotic.stats.availability == base.stats.availability
+
+
+def test_inert_chaos_heartbeats_actually_tick():
+    """The bitwise test above must not pass vacuously: an inert config
+    with outage specs present keeps the detector ticking (that is the
+    intermediate-advance path being exercised)."""
+    cm = _inert_chaos()
+    sim = _sim(cm, ran=True)
+    sim.run_stream(_trace(4), option="split3", fps=0.4,
+                   jitter_s=0.05, inflight=2)
+    assert cm.monitor.dead(now=0.0) == []      # both components beat
+    assert cm.transitions == []
+
+
+# ---------------------------------------------------------------------------
+# edge outages
+# ---------------------------------------------------------------------------
+
+def _edge_chaos(policy, warmup=0.0, window=(4.0, 3.0)):
+    return ChaosModel(ChaosConfig(
+        edge_outage=OutageSpec(schedule=(window,)),
+        edge_policy=policy, edge_warmup_s=warmup,
+        heartbeat_period_s=0.25, heartbeat_timeout_s=0.6))
+
+
+def test_edge_requeue_defers_without_loss():
+    r = _sim(_edge_chaos("requeue")).run_stream(
+        _trace(30), option="split3", fps=2.0)
+    st = r.stats
+    assert st.n_lost_edge == 0 and st.n_lost_path == 0
+    assert st.availability == 1.0
+    # nothing completes inside the outage window; arrivals caught by it
+    # finish only after recovery
+    assert all(not (4.0 < l.capture_s + l.delay_s < 7.0)
+               for l in r.logs if not l.dropped)
+    [m] = r.recovery
+    assert m.component == "edge" and m.n_lost == 0
+    assert 4.0 < m.detect_s <= 4.0 + 0.6 + 0.25
+
+
+def test_edge_drop_loses_in_window_arrivals():
+    r = _sim(_edge_chaos("drop")).run_stream(
+        _trace(30), option="split3", fps=2.0)
+    st = r.stats
+    lost = [l for l in r.logs if l.drop_reason]
+    assert st.n_lost_edge == len(lost) > 0
+    assert all(l.drop_reason == "edge_outage" and l.dropped for l in lost)
+    assert st.availability < 1.0
+    [m] = r.recovery
+    assert m.n_lost == len(lost)
+    assert m.burst_len > 0
+    # lost frames are deadline misses, never detections
+    assert all(l.deadline_miss for l in lost)
+
+
+def test_edge_warmup_extends_recovery_monotonically():
+    ttr = []
+    for warm in (0.0, 0.5, 1.5):
+        r = _sim(_edge_chaos("requeue", warmup=warm)).run_stream(
+            _trace(30), option="split3", fps=2.0)
+        [m] = r.recovery
+        ttr.append(m.time_to_recover_s)
+        # warm-up keeps the server unavailable through o1 + warmup
+        assert all(not (4.0 < l.capture_s + l.delay_s < 7.0 + warm)
+                   for l in r.logs if not l.dropped)
+    assert ttr[0] < ttr[1] < ttr[2]
+
+
+# ---------------------------------------------------------------------------
+# dUPF outage + failover
+# ---------------------------------------------------------------------------
+
+def _upf_chaos(failover):
+    return ChaosModel(ChaosConfig(
+        upf_outage=OutageSpec(schedule=((5.0, 6.0),)),
+        failover=failover, failover_path=cupf_path(),
+        heartbeat_period_s=0.25, heartbeat_timeout_s=0.6))
+
+
+def test_failover_keeps_the_stream_alive():
+    # fps 0.5 > the ~1.4 s frame latency: the cell keeps up, so frames
+    # DELIVER during the outage window and rerouting is the only delta.
+    # (At saturating fps both runs bottleneck on the UE head compute and
+    # lose the identical backlogged burst -- no failover signal.)
+    with_fo = _sim(_upf_chaos(True)).run_stream(
+        _trace(20), option="split3", fps=0.5)
+    without = _sim(_upf_chaos(False)).run_stream(
+        _trace(20), option="split3", fps=0.5)
+    # identical seeds, identical schedule: rerouting is the only delta
+    assert with_fo.stats.availability > without.stats.availability
+    assert with_fo.stats.n_lost_path < without.stats.n_lost_path
+    # frames that rode the failover path carry the cUPF's base latency
+    fo_paths = [l.path_s for l in with_fo.logs
+                if not l.dropped and l.path_s > 0.1]
+    assert fo_paths, "no frame ever rode the failover path"
+    assert min(fo_paths) > cupf_path().base_s - 3 * cupf_path().jitter_s
+    # losses only between outage start and DETECTION (the latency cost)
+    [m] = with_fo.recovery
+    assert 5.0 < m.detect_s <= 5.0 + 0.6 + 0.25
+    assert not math.isnan(m.clear_s) and m.clear_s >= 11.0
+    lost = [l for l in with_fo.logs if l.drop_reason]
+    assert all(l.drop_reason == "upf_outage" for l in lost)
+    # fail-back: frames captured well after recovery ride the primary
+    late = [l for l in with_fo.logs
+            if not l.dropped and l.capture_s > m.clear_s + 1.0]
+    assert late and all(l.path_s < 0.1 for l in late)
+
+
+def test_failover_detection_is_earned_not_oracle():
+    """Frames in flight before the heartbeat declares the dUPF dead are
+    the detection-latency cost: the failover run still loses a (smaller)
+    burst at the outage's leading edge."""
+    r = _sim(_upf_chaos(True)).run_stream(_trace(20), option="split3",
+                                          fps=0.5)
+    [m] = r.recovery
+    lost = [l for l in r.logs if l.drop_reason]
+    assert lost, "detection latency should cost at least one frame"
+    # routing is committed at admission: every loss was captured (and
+    # hence routed onto the primary path) before the detector fired,
+    # even if it delivered -- and died -- after the failover engaged
+    assert all(l.capture_s < m.detect_s for l in lost)
+
+
+# ---------------------------------------------------------------------------
+# link blackouts
+# ---------------------------------------------------------------------------
+
+def _blackout_chaos():
+    return ChaosModel(ChaosConfig(
+        blackout=OutageSpec(schedule=((3.0, 2.0),)), blackout_ues=(0,)))
+
+
+@pytest.mark.parametrize("engine", ["python", "vectorized"])
+def test_blackout_backlog_drains(engine):
+    r = _sim(_blackout_chaos(), ran=True, engine=engine).run_stream(
+        _trace(20), option="split3", fps=2.0)
+    st = r.stats
+    # rate->0 loses nothing: parked flows re-enter the MAC and drain
+    assert st.n_lost_edge == st.n_lost_path == 0
+    assert st.n_completed + st.n_dropped == 20 * 3
+    # the blacked-out UE's deliveries stall through the window
+    ue0 = [l for l in r.logs if l.ue_id == 0 and not l.dropped]
+    assert all(not (3.0 < l.capture_s + l.delay_s <= 5.0) for l in ue0)
+    # other UEs keep completing inside the window
+    others = [l for l in r.logs if l.ue_id != 0 and not l.dropped]
+    assert any(3.0 < l.capture_s + l.delay_s <= 5.0 for l in others)
+
+
+def test_blackout_python_vs_vectorized_parity():
+    res = {}
+    for engine in ("python", "vectorized"):
+        res[engine] = _sim(_blackout_chaos(), ran=True,
+                           engine=engine).run_stream(
+            _trace(20), option="split3", fps=2.0)
+    assert _rows(res["python"]) == _rows(res["vectorized"])
+
+
+# ---------------------------------------------------------------------------
+# churn
+# ---------------------------------------------------------------------------
+
+def test_churn_accounts_every_capture_exactly_once():
+    cm = ChaosModel(ChaosConfig(churn=ChurnSpec(
+        initial_p=0.7, mean_on_s=6.0, mean_off_s=3.0,
+        diurnal_period_s=15.0, diurnal_depth=0.5,
+        flash_crowds=((8.0, 4.0, 2.0),))))
+    r = _sim(cm, n_ues=4).run_stream(_trace(30, n_ues=4), option="split3",
+                                     fps=2.0)
+    st = r.stats
+    assert st.n_absent > 0, "churn never removed a UE (weak scenario)"
+    assert len(r.logs) + st.n_absent == 30 * 4
+    assert (st.n_completed + st.n_dropped + st.n_lost_edge
+            + st.n_lost_path + st.n_absent) == 30 * 4
+
+
+def test_flash_crowd_pulls_absent_ues_back():
+    spec = ChurnSpec(initial_p=0.0, mean_off_s=10.0, mean_on_s=0.0,
+                     flash_crowds=((0.0, 100.0, 9.0),))
+    calm = ChurnSpec(initial_p=0.0, mean_off_s=10.0, mean_on_s=0.0)
+    rng = np.random.default_rng(3)
+    boosted = spec.intervals(np.random.default_rng(3), 100.0, 8)
+    base = calm.intervals(rng, 100.0, 8)
+    # intensity 10x compresses the off-sojourn: every UE returns earlier
+    for b, c in zip(boosted, base):
+        assert b and c
+        assert b[0][0] < c[0][0]
+
+
+# ---------------------------------------------------------------------------
+# rng discipline of the schedule itself
+# ---------------------------------------------------------------------------
+
+def test_specs_draw_fixed_budget_regardless_of_rates():
+    """Tuning a spec's rates must not shift its rng stream: the inert
+    and the live spec leave the generator in the same state."""
+    for a, b in ((OutageSpec(), OutageSpec(rate_hz=0.2,
+                                           mean_duration_s=2.0)),):
+        ra, rb = np.random.default_rng(5), np.random.default_rng(5)
+        a.windows(ra, 50.0)
+        b.windows(rb, 50.0)
+        assert ra.random() == rb.random()
+    ca = ChurnSpec()
+    cb = ChurnSpec(initial_p=0.5, mean_on_s=4.0, mean_off_s=2.0)
+    ra, rb = np.random.default_rng(5), np.random.default_rng(5)
+    ca.intervals(ra, 50.0, 6)
+    cb.intervals(rb, 50.0, 6)
+    assert ra.random() == rb.random()
+
+
+def test_feature_schedules_are_isolated():
+    """Enabling one chaos feature never moves another's schedule (each
+    feature draws from its own grandchild of the dedicated seed)."""
+    live_upf = OutageSpec(rate_hz=0.2, mean_duration_s=1.0)
+    a = ChaosModel(ChaosConfig(upf_outage=live_upf))
+    b = ChaosModel(ChaosConfig(upf_outage=live_upf,
+                               edge_outage=OutageSpec(rate_hz=0.5,
+                                                      mean_duration_s=2.0),
+                               churn=ChurnSpec(mean_on_s=5.0,
+                                               mean_off_s=5.0)))
+    # fresh SeedSequence per model: spawning advances the parent's key
+    a.reset(3, np.random.SeedSequence(42))
+    b.reset(3, np.random.SeedSequence(42))
+    a.begin(60.0)
+    b.begin(60.0)
+    assert a.upf_windows == b.upf_windows
+    assert b.edge_windows and a.edge_windows == []
+
+
+def test_schedule_is_deterministic_across_runs():
+    def one():
+        cm = ChaosModel(ChaosConfig(
+            edge_outage=OutageSpec(rate_hz=0.1, mean_duration_s=2.0),
+            churn=ChurnSpec(initial_p=0.8, mean_on_s=6.0, mean_off_s=3.0)))
+        sim = _sim(cm)
+        r = sim.run_stream(_trace(20), option="split3", fps=2.0)
+        return cm.edge_windows, cm._churn_iv, _rows(r)
+
+    assert one() == one()
+
+
+# ---------------------------------------------------------------------------
+# controller re-probe + metric plumbing
+# ---------------------------------------------------------------------------
+
+def test_notify_outage_resets_estimates_and_ewmas():
+    c = _controller()
+    c._granted_rate = 1e6
+    c._current = "split2"
+    c._drop_ewma = 0.4
+    c._age_ewma = 3.0
+    c.notify_outage()
+    assert c._granted_rate is None and c._current is None
+    assert c._drop_ewma == 0.0 and c._age_ewma == 0.0
+
+
+def test_reconvergence_is_measured_for_adaptive_runs():
+    r = _sim(_upf_chaos(True), adaptive=True).run_stream(
+        _trace(20), option=None, fps=0.5)
+    [m] = r.recovery
+    assert isinstance(m, RecoveryMetrics)
+    assert m.reconverge_frames is not None and m.reconverge_frames >= 1.0
+
+
+def test_chaos_refuses_lockstep_engine():
+    sim = _sim(_inert_chaos())
+    with pytest.raises(ValueError, match="absolute"):
+        sim.run(_trace(2))
+
+
+def test_bad_edge_policy_rejected():
+    with pytest.raises(ValueError, match="edge_policy"):
+        ChaosConfig(edge_policy="retry")

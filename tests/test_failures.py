@@ -1,0 +1,180 @@
+"""Direct unit tests for runtime/failures.py (heartbeat detection,
+straggler medians, elastic re-mesh, the recovery decision point).
+
+The module shipped with the seed and sat unused for six PRs; the chaos
+subsystem (core/chaos.py) now drives it, so its contracts are pinned
+here: strict clock discipline on the simulated path (wall-clock
+``time.monotonic()`` defaults are refused), proper even-length medians,
+and the continue/remesh/halt decision branches."""
+import pytest
+
+from repro.runtime.failures import (HeartbeatMonitor, StragglerMonitor,
+                                    _median, decide_recovery, elastic_plan)
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor clock discipline
+# ---------------------------------------------------------------------------
+
+def test_strict_clock_refuses_wall_clock_default():
+    m = HeartbeatMonitor(n_workers=2, timeout_s=1.0, strict_clock=True)
+    with pytest.raises(ValueError, match="strict_clock"):
+        m.beat(0)
+    with pytest.raises(ValueError, match="strict_clock"):
+        m.dead()
+    with pytest.raises(ValueError, match="strict_clock"):
+        m.alive()
+
+
+def test_strict_clock_works_with_explicit_now():
+    m = HeartbeatMonitor(n_workers=2, timeout_s=1.0, strict_clock=True)
+    m.beat(0, now=0.0)
+    m.beat(1, now=0.0)
+    assert m.dead(now=0.5) == []
+    assert m.alive(now=0.5) == [0, 1]
+    assert m.dead(now=1.0) == []          # exactly at the timeout: alive
+    assert m.dead(now=1.5) == [0, 1]      # strictly past it: dead
+
+
+def test_heartbeat_detects_missed_beats_on_sim_clock():
+    m = HeartbeatMonitor(n_workers=2, timeout_s=1.0, strict_clock=True)
+    m.beat(0, now=0.0)
+    m.beat(1, now=0.0)
+    m.beat(0, now=2.0)                    # only worker 0 keeps beating
+    assert m.dead(now=2.0) == [1]
+    assert m.alive(now=2.0) == [0]
+    m.beat(1, now=2.5)                    # worker 1 recovers
+    assert m.dead(now=2.5) == []
+
+
+def test_never_beaten_worker_is_dead():
+    m = HeartbeatMonitor(n_workers=3, timeout_s=10.0, strict_clock=True)
+    m.beat(0, now=0.0)
+    assert m.dead(now=0.0) == [1, 2]
+
+
+def test_default_clock_still_works_for_live_path():
+    # the live control plane keeps the wall-clock default
+    m = HeartbeatMonitor(n_workers=1, timeout_s=1e6)
+    m.beat(0)
+    assert m.dead() == []
+
+
+# ---------------------------------------------------------------------------
+# _median / StragglerMonitor
+# ---------------------------------------------------------------------------
+
+def test_median_odd_and_even():
+    assert _median([3.0]) == 3.0
+    assert _median([1.0, 3.0, 2.0]) == 2.0
+    # even length: MEAN of the two middles, not the upper middle (the
+    # old ``sorted(xs)[len//2]`` returned 3.0 here)
+    assert _median([1.0, 2.0, 3.0, 4.0]) == 2.5
+    assert _median([4.0, 1.0]) == 2.5
+
+
+def test_straggler_flags_slow_worker():
+    s = StragglerMonitor(n_workers=3, window=8, factor=2.0)
+    for _ in range(4):
+        s.record(0, 1.0)
+        s.record(1, 1.1)
+        s.record(2, 5.0)                  # 5.0 > 2.0 * median(1.0,1.1,5.0)
+    med = s.medians()
+    assert med[0] == 1.0 and med[2] == 5.0
+    assert s.stragglers() == [2]
+
+
+def test_straggler_even_window_uses_true_median():
+    s = StragglerMonitor(n_workers=2, window=8, factor=2.0)
+    # even-length history per worker: medians must average the middles
+    for v in (1.0, 3.0):
+        s.record(0, v)
+    for v in (10.0, 30.0):
+        s.record(1, v)
+    assert s.medians() == {0: 2.0, 1: 20.0}
+    # global median of {2.0, 20.0} is 11.0; 20.0 <= 2*11.0 -> no flag
+    # (the old upper-middle bias took 20.0 as the global median)
+    assert s.stragglers() == []
+
+
+def test_straggler_needs_two_workers():
+    s = StragglerMonitor(n_workers=1)
+    s.record(0, 99.0)
+    assert s.stragglers() == []
+
+
+# ---------------------------------------------------------------------------
+# elastic_plan / decide_recovery
+# ---------------------------------------------------------------------------
+
+def test_elastic_plan_power_of_two_dp():
+    p = elastic_plan(6, devices_per_host=4, model_parallel=4)
+    assert p is not None
+    assert p.shape == (4, 4) and p.axes == ("data", "model")
+    assert p.data_parallel == 4           # 24//4 = 6 -> floor pow2 = 4
+
+
+def test_elastic_plan_pods_branch():
+    p = elastic_plan(8, devices_per_host=4, model_parallel=4, pods=2)
+    assert p.shape == (2, 4, 4) and p.axes == ("pod", "data", "model")
+    assert p.data_parallel == 8
+
+
+def test_elastic_plan_none_when_model_replica_cannot_fit():
+    assert elastic_plan(1, devices_per_host=1, model_parallel=2) is None
+
+
+def _monitors(beats=(0.0, 0.0), now=0.0, timeout=1.0):
+    m = HeartbeatMonitor(n_workers=2, timeout_s=timeout, strict_clock=True)
+    for w, t in enumerate(beats):
+        if t is not None:
+            m.beat(w, now=t)
+    return m, StragglerMonitor(n_workers=2)
+
+
+def test_decide_continue_when_all_alive():
+    m, s = _monitors()
+    dec = decide_recovery(m, s, 1, 1, last_ckpt_step=7, now=0.5)
+    assert dec.action == "continue"
+    assert dec.plan is None and dec.restore_step is None
+
+
+def test_decide_remesh_and_restore_on_one_dead():
+    m, s = _monitors(beats=(5.0, 0.0), timeout=1.0)
+    dec = decide_recovery(m, s, 1, 1, last_ckpt_step=7, now=5.0)
+    assert dec.action == "remesh"
+    assert dec.excluded_workers == (1,)
+    assert dec.restore_step == 7          # dead host lost state -> restore
+
+
+def test_decide_halt_when_nothing_left():
+    m, s = _monitors(beats=(None, None), timeout=1.0)
+    dec = decide_recovery(m, s, 1, model_parallel=4, last_ckpt_step=3,
+                          now=0.0)
+    assert dec.action == "halt"
+    assert dec.restore_step == 3
+    assert dec.excluded_workers == (0, 1)
+
+
+def test_decide_pure_straggler_remesh_without_restore():
+    # 3 workers: with the true (mean-of-middles) median, a 2-worker
+    # fleet can never flag at factor 2 -- m > (m + other)/2 * 2 has no
+    # positive solution -- so the straggler case needs a third host
+    m = HeartbeatMonitor(n_workers=3, timeout_s=1.0, strict_clock=True)
+    for w in range(3):
+        m.beat(w, now=0.0)
+    s = StragglerMonitor(n_workers=3)
+    for _ in range(4):
+        s.record(0, 1.0)
+        s.record(1, 1.0)
+        s.record(2, 9.0)                  # 9 > 2 * global median 1.0
+    dec = decide_recovery(m, s, 1, 1, last_ckpt_step=7, now=0.5)
+    assert dec.action == "remesh"
+    assert dec.excluded_workers == (2,)
+    assert dec.restore_step is None       # straggler keeps params in HBM
+
+
+def test_decide_recovery_threads_now_to_strict_monitor():
+    m, s = _monitors()
+    with pytest.raises(ValueError, match="strict_clock"):
+        decide_recovery(m, s, 1, 1, last_ckpt_step=None)   # no now -> refused

@@ -15,6 +15,11 @@ absolute traces:
   * ``ran_streaming.json``  -- the full stack: shared-air-interface MAC
     (EDF), continuous-time event engine, capture jitter, a bounded
     in-flight window (so the drop path is pinned too).
+  * ``chaos_outage.json``   -- the full stack under injected faults: an
+    edge-server outage (drop policy), a dUPF outage with mid-stream
+    failover to the cUPF path, a link blackout parking one UE's flows,
+    and churn removing captures -- pins the chaos schedule's rng
+    discipline AND the loss/reroute accounting (PR 7).
 
 Regenerate deliberately (after an INTENDED trace change) with
 
@@ -50,6 +55,12 @@ SCALAR_FIELDS = ("option", "interference_db", "delay_s", "head_s",
                  "ue_id", "queue_s", "batch_size", "prb_share", "harq_retx",
                  "deadline_s", "air_s", "frame_idx", "capture_s", "age_s",
                  "dropped", "serving_cell", "handover_count")
+
+# per-scenario additions on top of SCALAR_FIELDS (keeps the two original
+# goldens' field sets -- and hence their committed fixtures -- unchanged)
+EXTRA_FIELDS = {
+    "chaos_outage": ("drop_reason",),
+}
 
 
 def _system():
@@ -109,9 +120,34 @@ def ran_streaming_result():
                           jitter_s=0.05, inflight=2)
 
 
+def chaos_outage_result():
+    from repro.core.chaos import (ChaosConfig, ChaosModel, ChurnSpec,
+                                  OutageSpec)
+    from repro.core.channel import cupf_path
+    system = _system()
+    plan = SwinSplitPlan(SWIN_FULL, params=None)
+    chaos = ChaosModel(ChaosConfig(
+        edge_outage=OutageSpec(schedule=((4.0, 2.0),)),
+        edge_policy="drop",
+        upf_outage=OutageSpec(schedule=((10.0, 3.0),)),
+        failover=True, failover_path=cupf_path(),
+        blackout=OutageSpec(schedule=((16.0, 1.5),)), blackout_ues=(0,),
+        churn=ChurnSpec(initial_p=1.0, mean_on_s=9.0, mean_off_s=3.0),
+        heartbeat_period_s=0.25, heartbeat_timeout_s=0.6))
+    sim = CellSimulator(plan=plan, system=system, n_ues=3, seed=11,
+                        execute_model=False, frame_budget_s=3.0,
+                        controller=_controller(system),
+                        ran=RanCell(policy=make_policy("edf"),
+                                    cfg=RanConfig(tti_s=0.005)),
+                        chaos=chaos)
+    return sim.run_stream(np.tile(_trace(), (2, 1)), option=None,
+                          fps=0.4, jitter_s=0.05, inflight=2)
+
+
 SCENARIOS = {
     "legacy_lockstep": legacy_lockstep_result,
     "ran_streaming": ran_streaming_result,
+    "chaos_outage": chaos_outage_result,
 }
 
 
@@ -126,8 +162,8 @@ def _norm(v):
     return v
 
 
-def log_to_dict(log) -> dict:
-    d = {f: _norm(getattr(log, f)) for f in SCALAR_FIELDS}
+def log_to_dict(log, extra=()) -> dict:
+    d = {f: _norm(getattr(log, f)) for f in SCALAR_FIELDS + tuple(extra)}
     d["predicted_option"] = log.predicted.option if log.predicted else None
     return d
 
@@ -150,7 +186,8 @@ def _decode(v):
 
 def dump_golden(name: str) -> str:
     res = SCENARIOS[name]()
-    rows = [{k: _encode(v) for k, v in log_to_dict(l).items()}
+    extra = EXTRA_FIELDS.get(name, ())
+    rows = [{k: _encode(v) for k, v in log_to_dict(l, extra).items()}
             for l in res.logs]
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     path = os.path.join(GOLDEN_DIR, f"{name}.json")
@@ -175,7 +212,8 @@ def test_golden_trace_replays_field_exact(name):
     stage composition or accounting fails loudly here even if every
     pairing test (which compares two moved-together runs) still passes."""
     want = load_golden(name)
-    got = [log_to_dict(l) for l in SCENARIOS[name]().logs]
+    got = [log_to_dict(l, EXTRA_FIELDS.get(name, ()))
+           for l in SCENARIOS[name]().logs]
     assert len(got) == len(want), \
         f"{name}: {len(got)} logs vs {len(want)} in the golden"
     for i, (g, w) in enumerate(zip(got, want)):
@@ -205,6 +243,18 @@ def test_goldens_cover_both_regimes():
     assert any(r["prb_share"] < 1.0 for r in ran if not r["dropped"])
     assert any(r["dropped"] for r in ran)
     assert any(r["harq_retx"] > 0 for r in ran)
+
+
+def test_chaos_golden_covers_the_fault_paths():
+    """The chaos fixture stays meaningful: it pins at least one frame
+    lost to each injected fault and at least one frame rerouted over the
+    failover path (path latency far above the dUPF's)."""
+    rows = load_golden("chaos_outage")
+    reasons = {r["drop_reason"] for r in rows}
+    assert "edge_outage" in reasons
+    assert "upf_outage" in reasons
+    assert any(not r["dropped"] and r["path_s"] > 0.1 for r in rows)
+    assert all(bool(r["drop_reason"]) == r["dropped"] for r in rows)
 
 
 if __name__ == "__main__":

@@ -7,7 +7,14 @@ loads, scheduler policies and PRB grids (hypothesis):
   * byte conservation through ``RanCell.serve_slot`` (all enqueued bytes
     are delivered) and through a partially-advanced ``RanStream``
     (enqueued = delivered + still-queued backlog, HARQ re-enqueues
-    included by construction of the remaining-bits ledger).
+    included by construction of the remaining-bits ledger),
+  * byte conservation through a mid-stream link blackout (every flow
+    parked via ``migrate_ue`` at the blackout instant, re-adopted at its
+    end: delivered + parked remainder == enqueued, and the post-blackout
+    drain delivers every byte exactly once),
+  * python-vs-vectorized MAC parity through the same park/adopt cycle,
+  * structural sanity + fixed rng draw budget of ``ChurnSpec.intervals``
+    (the shrinking/growing UE pool schedule used by core/chaos.py).
 
 Each invariant lives in a plain ``check_*`` helper so the module's logic
 is importable without hypothesis; the ``@given`` wrappers drive them
@@ -162,6 +169,103 @@ def check_stream_conservation(policy_name, sizes, rates, n_prbs,
     assert stream.backlog_bytes == 0.0
 
 
+def check_blackout_conservation(policy_name, sizes, rates, n_prbs, bler,
+                                seed, t_black, gap_s,
+                                stream_cls=RanStream):
+    """Mid-stream link blackout (rate -> 0 for every UE): at ``t_black``
+    each UE's unfinished flows are parked via ``migrate_ue``; byte
+    conservation must hold with the parked remainder counted
+    (delivered + parked == enqueued, the stream's own backlog is empty),
+    and re-adoption at ``t_black + gap_s`` drains every remaining byte
+    exactly once, never finishing before the blackout ends."""
+    cell = RanCell(policy=make_policy(policy_name),
+                   cfg=RanConfig(n_prbs=n_prbs, tti_s=1e-3,
+                                 bler_target=bler))
+    cell.reset(len(sizes))
+    stream = stream_cls(cell)
+    flows = [stream.enqueue(
+        UplinkRequest(ue_id=i, n_bytes=int(b), enqueue_s=0.0,
+                      deadline_s=100.0, link_rate_bps=float(r)),
+        cohort=0)
+        for i, (b, r) in enumerate(zip(sizes, rates))]
+    total_bits = sum(int(b) * 8.0 for b in sizes)
+    rng = np.random.default_rng(seed)
+    finished = stream.advance(t_black, rng)
+    parked = []
+    for i in range(len(sizes)):
+        parked.extend(stream.migrate_ue(i))
+    assert len(finished) + len(parked) == len(sizes)
+    done_bits = sum(f.req.n_bytes * 8.0 for f in finished)
+    progress = sum(f.req.n_bytes * 8.0 - f.rem_bits for f in parked)
+    parked_bits = sum(f.rem_bits for f in parked)
+    assert stream.backlog_bytes == 0.0      # everything unfinished left
+    assert done_bits + progress + parked_bits == pytest.approx(total_bits)
+    for f in parked:
+        assert 0.0 < f.rem_bits <= f.req.n_bytes * 8.0
+    t_back = t_black + gap_s
+    adopted = [stream.adopt(f, max(f.req.enqueue_s, t_back), cohort=1)
+               for f in parked]
+    finished2 = stream.advance(float("inf"), rng)
+    assert sorted(f.req.ue_id for f in finished + finished2) \
+        == list(range(len(sizes)))
+    for f in finished2:
+        assert f.rem_bits == 0.0
+        if any(f.req.ue_id == a.req.ue_id for a in adopted):
+            assert f.finish_s >= t_back - 1e-9   # no service in the gap
+    assert stream.backlog_bytes == 0.0
+    return finished + finished2
+
+
+def check_vec_blackout_parity(policy_name, sizes, rates, n_prbs, bler,
+                              seed, t_black, gap_s):
+    """The vectorized MAC stays finish-time-exact with the python oracle
+    through the park/adopt cycle (same rng seeds on both sides)."""
+    from repro.core.ran_vec import VecRanStream
+    outs = {}
+    for cls in (RanStream, VecRanStream):
+        fin = check_blackout_conservation(
+            policy_name, sizes, rates, n_prbs, bler, seed, t_black,
+            gap_s, stream_cls=cls)
+        outs[cls.__name__] = sorted(
+            (f.req.ue_id, f.finish_s, f.n_tx, f.n_retx) for f in fin)
+    a, b = outs["RanStream"], outs["VecRanStream"]
+    assert [(u, t, n) for u, t, n, _ in a] \
+        == [(u, t, n) for u, t, n, _ in b]
+    # retx counters may differ only by the flushed in-flight TB
+    assert all(abs(x[3] - y[3]) <= 1 for x, y in zip(a, b))
+
+
+def check_churn_intervals(initial_p, mean_on, mean_off, depth, period,
+                          horizon, n_ues, seed):
+    """ChurnSpec.intervals: per-UE presence windows are sorted,
+    non-overlapping, start inside the horizon, and the draw budget is
+    independent of the configured rates (the zero-chaos bitwise
+    guarantee at the schedule level)."""
+    from repro.core.chaos import ChurnSpec
+    spec = ChurnSpec(initial_p=initial_p, mean_on_s=mean_on,
+                     mean_off_s=mean_off, diurnal_period_s=period,
+                     diurnal_depth=depth)
+    iv = spec.intervals(np.random.default_rng(seed), horizon, n_ues)
+    assert len(iv) == n_ues
+    for rows in iv:
+        prev_end = 0.0
+        for j, (a, b) in enumerate(rows):
+            assert a >= 0.0
+            # only the trailing open-ended interval may start past the
+            # horizon (the UE toggled on after the run ended)
+            if j < len(rows) - 1:
+                assert a < horizon
+            assert a >= prev_end
+            assert b > a
+            prev_end = b
+    # fixed draw budget: the inert spec consumes the same rng state
+    r_live = np.random.default_rng(seed)
+    r_inert = np.random.default_rng(seed)
+    spec.intervals(r_live, horizon, n_ues)
+    ChurnSpec().intervals(r_inert, horizon, n_ues)
+    assert r_live.random() == r_inert.random()
+
+
 # ---------------------------------------------------------------------------
 # hypothesis drivers
 # ---------------------------------------------------------------------------
@@ -221,3 +325,43 @@ def test_stream_byte_conservation(policy, sizes, rate, n_prbs, bler, seed,
     rates = [rate] * len(sizes)
     check_stream_conservation(policy, sizes, rates, n_prbs, bler, seed,
                               until_s)
+
+
+@settings(max_examples=20, deadline=None)
+@given(policy=st.sampled_from(POLICY_NAMES),
+       rate=st.floats(min_value=5e6, max_value=1e8),
+       t_black=st.floats(min_value=0.002, max_value=0.2),
+       gap_s=st.floats(min_value=0.0, max_value=0.5), **load_args)
+def test_blackout_byte_conservation(policy, sizes, rate, n_prbs, bler,
+                                    seed, t_black, gap_s):
+    rates = [rate] * len(sizes)
+    check_blackout_conservation(policy, sizes, rates, n_prbs, bler, seed,
+                                t_black, gap_s)
+
+
+@settings(max_examples=10, deadline=None)
+@given(policy=st.sampled_from(POLICY_NAMES),
+       rate=st.floats(min_value=5e6, max_value=1e8),
+       t_black=st.floats(min_value=0.002, max_value=0.1),
+       gap_s=st.floats(min_value=0.0, max_value=0.2), **load_args)
+def test_vec_blackout_parity(policy, sizes, rate, n_prbs, bler, seed,
+                             t_black, gap_s):
+    pytest.importorskip("jax")
+    rates = [rate] * len(sizes)
+    check_vec_blackout_parity(policy, sizes, rates, n_prbs, bler, seed,
+                              t_black, gap_s)
+
+
+@settings(max_examples=30, deadline=None)
+@given(initial_p=st.floats(min_value=0.0, max_value=1.0),
+       mean_on=st.sampled_from([0.0, 2.0, 10.0]),
+       mean_off=st.sampled_from([0.0, 1.0, 5.0]),
+       depth=st.floats(min_value=0.0, max_value=0.9),
+       period=st.sampled_from([0.0, 20.0]),
+       horizon=st.floats(min_value=1.0, max_value=120.0),
+       n_ues=st.integers(min_value=1, max_value=12),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_churn_interval_invariants(initial_p, mean_on, mean_off, depth,
+                                   period, horizon, n_ues, seed):
+    check_churn_intervals(initial_p, mean_on, mean_off, depth, period,
+                          horizon, n_ues, seed)
