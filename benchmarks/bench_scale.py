@@ -114,6 +114,37 @@ def _ue_sweep(sizes, policies, python_ceiling, repeats=1):
     return rows
 
 
+def _traced_overhead(n, pol, repeats=3):
+    """Traced vs untraced 10k-flow vectorized drain: telemetry rides the
+    vectorized engine as ONE post-drain numpy pass (mac_flows_bulk), so
+    the traced wall time must stay within 1.25x of the untraced drain --
+    the tentpole's 'does not kill the 30x speedup' acceptance bar."""
+    from repro.core.telemetry import Telemetry
+
+    _drain(_build(n, pol, vec=True))                  # warmup: compile
+    untraced = min(_drain(_build(n, pol, vec=True))[0]
+                   for _ in range(repeats))
+
+    def traced_once():
+        strm = _build(n, pol, vec=True)
+        rng = np.random.default_rng(5)
+        tele = Telemetry()
+        tele.begin_run("stream/vectorized", "absolute", n)
+        t0 = time.perf_counter()
+        flows = strm.advance(np.inf, rng)
+        tele.mac_flows_bulk(0, flows, strm.cfg.tti_s, strm.cfg.n_prbs)
+        dt = time.perf_counter() - t0
+        assert len(tele.spans) == len(flows)
+        return dt
+
+    traced = min(traced_once() for _ in range(repeats))
+    ratio = traced / untraced
+    print(f"  traced overhead n={n}: untraced={untraced * 1e3:.1f}ms "
+          f"traced={traced * 1e3:.1f}ms ratio={ratio:.3f}x")
+    return {"n_flows": n, "policy": pol, "untraced_s": untraced,
+            "traced_s": traced, "ratio": ratio}
+
+
 def _device_sweep(device_counts, n_ues, n_cells):
     """One subprocess per point: the forced-device flag must be set
     before jax initializes, so each count needs a fresh interpreter."""
@@ -192,6 +223,12 @@ def run(fast: bool = False):
     dev_rows = _device_sweep(device_counts, city_ues, city_cells)
     table["device_sweep"] = dev_rows
 
+    # telemetry cost at the 10k headline (both modes: the bound is the
+    # tentpole's acceptance bar, so the CI smoke must enforce it too)
+    print("  -- traced overhead --")
+    tr = _traced_overhead(10240, policies[-1])
+    table["traced_overhead"] = tr
+
     # -- acceptance -----------------------------------------------------------
     head = {r["policy"]: r for r in ue_rows if r["n_flows"] == headline}
     small = {r["policy"]: r for r in ue_rows if r["n_flows"] == sizes[0]}
@@ -208,6 +245,8 @@ def run(fast: bool = False):
         "speedup_grows_with_scale": grows_ok,
         "device_scaling_sublinear": sublinear_ok,
         "target_100x_met": target_met,
+        "traced_overhead_bound": 1.25,
+        "traced_overhead_ok": tr["ratio"] <= 1.25,
         "target_100x_context": (
             "measured on a single CPU core: the oracle's python loop and "
             "the XLA kernels contend for the same core, so the ceiling is "
@@ -221,6 +260,8 @@ def run(fast: bool = False):
     assert grows_ok, "speedup must grow from the smallest to headline size"
     assert sublinear_ok, \
         [(r["n_devices"], r["s_per_slot"]) for r in dev_rows]
+    assert tr["ratio"] <= 1.25, \
+        f"tracing cost {tr['ratio']:.3f}x exceeds the 1.25x bound"
 
     save("bench_scale_fast" if fast else "bench_scale", table)
     sp = {p: head[p]["speedup"] for p in sorted(head)}

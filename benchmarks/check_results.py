@@ -1,0 +1,87 @@
+"""Schema check over the committed benchmark artifacts.
+
+Every ``results/bench_*.json`` must (a) parse, (b) be non-empty, and
+(c) -- for the files whose consumers depend on specific top-level keys
+(plots, CI acceptance gates, the roofline table) -- carry those keys.
+The registry below is the contract: add an entry when a bench grows a
+structured schema, so a refactor that silently drops ``acceptance`` or
+``config`` fails CI instead of shipping an artifact the next reader
+cannot parse.
+
+    PYTHONPATH=src python -m benchmarks.check_results [results_dir]
+
+Exit status 0 = all artifacts conform; 1 = violations (listed on stdout).
+Also callable from tests: ``check(results_dir) -> list[str]``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+# required top-level keys per artifact family; files not listed here get
+# the generic parse + non-empty check only.  The *_fast variants written
+# by the CI smoke share their full run's schema.
+REQUIRED: Dict[str, Tuple[str, ...]] = {
+    "bench_chaos": ("config", "acceptance"),
+    "bench_chaos_fast": ("config", "acceptance"),
+    "bench_kernel_cost": ("config", "hlo", "roofline"),
+    "bench_mobility": ("config", "acceptance"),
+    "bench_ran": ("config", "acceptance"),
+    "bench_scale": ("config", "ue_sweep", "acceptance"),
+    "bench_scale_fast": ("config", "ue_sweep", "acceptance"),
+    "bench_streaming": ("config", "acceptance"),
+}
+
+
+def check(results_dir: str) -> List[str]:
+    errors: List[str] = []
+    paths = sorted(glob.glob(os.path.join(results_dir, "bench_*.json")))
+    if not paths:
+        return [f"no bench_*.json artifacts under {results_dir!r}"]
+    for path in paths:
+        name = os.path.splitext(os.path.basename(path))[0]
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError) as e:
+            errors.append(f"{name}: unparseable ({e})")
+            continue
+        if not payload:
+            errors.append(f"{name}: empty artifact")
+            continue
+        if not isinstance(payload, (dict, list)):
+            errors.append(f"{name}: top level must be an object or array, "
+                          f"got {type(payload).__name__}")
+            continue
+        need = REQUIRED.get(name, ())
+        if need and not isinstance(payload, dict):
+            errors.append(f"{name}: registry expects an object with keys "
+                          f"{need}, got {type(payload).__name__}")
+            continue
+        missing = [k for k in need if k not in payload]
+        if missing:
+            errors.append(f"{name}: missing required keys {missing} "
+                          f"(has {sorted(payload)[:10]})")
+    return errors
+
+
+def main(argv: List[str] = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    results_dir = argv[0] if argv else os.path.join(
+        os.path.dirname(__file__), os.pardir, "results")
+    errs = check(results_dir)
+    n = len(glob.glob(os.path.join(results_dir, "bench_*.json")))
+    if errs:
+        for e in errs:
+            print(f"SCHEMA {e}")
+        print(f"{len(errs)} violation(s) across {n} artifacts")
+        return 1
+    print(f"{n} bench artifacts conform")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

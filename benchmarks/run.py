@@ -27,8 +27,9 @@ def main() -> int:
     from benchmarks import (bench_adaptive, bench_cell, bench_chaos,
                             bench_compression, bench_dupf, bench_e2e_delay,
                             bench_energy_breakdown, bench_energy_privacy,
-                            bench_estimator, bench_mobility, bench_ran,
-                            bench_scale, bench_streaming, bench_tx_energy)
+                            bench_estimator, bench_kernel_cost,
+                            bench_mobility, bench_ran, bench_scale,
+                            bench_streaming, bench_tx_energy)
 
     benches = [
         # fast mode: reduced model, same legacy-vs-fused comparison + the
@@ -63,6 +64,12 @@ def main() -> int:
         # no-failover); writes bench_chaos_fast.json so the CI smoke
         # never clobbers the committed full-run curves
         ("chaos_recovery", lambda: bench_chaos.run(fast=True)),
+        # compiles the reduced Swin forward and pushes it through the
+        # loop-aware HLO analyzer (launch/hlo_cost.py) + roofline table
+        # (benchmarks/roofline.py) -- the dry-run-free path, so the CI
+        # smoke exercises both formerly write-only modules and commits
+        # results/bench_kernel_cost.json
+        ("kernel_cost", lambda: bench_kernel_cost.run(fast=True)),
     ]
     if args.only:
         benches = [(n, f) for n, f in benches if args.only in n]

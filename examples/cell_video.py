@@ -87,6 +87,11 @@ def main():
                     help="inject an edge outage, a dUPF outage with "
                          "failover, a link blackout and UE churn "
                          "(core/chaos.py; needs --fps)")
+    ap.add_argument("--trace", default=None, metavar="OUT.JSON",
+                    help="record the telemetry plane (core/telemetry.py) "
+                         "and write a Perfetto/Chrome trace here: open "
+                         "ui.perfetto.dev and drop the file on it; adds a "
+                         "per-frame cause-of-miss summary line")
     args = ap.parse_args()
     if args.mobility and args.fps is None:
         ap.error("--mobility needs --fps (handover events live on the "
@@ -148,13 +153,17 @@ def main():
                             mean_off_s=0.15 * horizon),
             heartbeat_period_s=0.01 * horizon,
             heartbeat_timeout_s=0.025 * horizon))
+    telemetry = None
+    if args.trace is not None:
+        from repro.core.telemetry import Telemetry
+        telemetry = Telemetry()
     cell = CellSimulator(
         plan=SwinSplitPlan(cfg, params), system=system,
         codec=ActivationCodec(), controller=controller,
         n_ues=args.ues, seed=0, execute_model=True,
         batching=not args.no_batching, max_wait_s=30.0,
         ran=ran, frame_budget_s=args.budget, mobility=mobility,
-        chaos=chaos)
+        chaos=chaos, telemetry=telemetry)
 
     trace = cell_interference_traces(args.frames, args.ues, seed=1)
     if args.fps is not None:
@@ -237,6 +246,22 @@ def main():
                   f"{m.end_s:6.1f}s: {detect}, recovered in "
                   f"{m.time_to_recover_s:.1f}s, lost {m.n_lost} "
                   f"(burst {m.burst_len}){reconv}")
+    if telemetry is not None:
+        from repro.core.telemetry import miss_cause
+        from repro.core.trace_export import write_chrome_trace
+        write_chrome_trace(telemetry, args.trace)
+        causes = telemetry.miss_summary(res.logs)
+        total = sum(causes.values())
+        detail = ", ".join(f"{k}={v}" for k, v in causes.items()) \
+            or "none"
+        print(f"\ntrace: {len(telemetry.spans)} spans, "
+              f"{len(telemetry.instants)} instants -> {args.trace} "
+              f"(load in ui.perfetto.dev)")
+        print(f"missed/lost frames: {total} -- causes: {detail}")
+        missed = [l for l in res.logs if l.dropped or l.deadline_miss]
+        for l in missed:
+            print(f"  ue {l.ue_id} frame {l.frame_idx:3d} "
+                  f"captured {l.capture_s:7.2f}s: {miss_cause(l)}")
 
 
 if __name__ == "__main__":

@@ -368,6 +368,12 @@ class CellSimulator:
     # scaling the MAC hot path to 10k+ UEs.  Ignored when ran is None
     # (the legacy radio has no TTI loop to vectorize).
     engine: str = "python"
+    # telemetry plane (core/telemetry.py Telemetry).  None = no tracing.
+    # Every hook is a pure observer of timestamps the engines compute
+    # anyway -- no rng draws, no float feedback -- so attaching one
+    # replays a telemetry-free run bitwise (tests/test_telemetry.py
+    # pins this against the golden fixtures).
+    telemetry: Optional[Any] = None
     stats: CellStats = field(default_factory=CellStats)
 
     def __post_init__(self):
@@ -632,6 +638,9 @@ class CellSimulator:
         per-UE traces.  Resets seeded state first, so repeated ``run`` calls
         on one simulator reproduce exactly."""
         self.reset()
+        tele = self.telemetry
+        if tele is not None:
+            tele.begin_run("lockstep", "slot", self.n_ues)
         trace = np.asarray(interference, float)
         if trace.ndim == 1:
             trace = trace[:, None]
@@ -645,6 +654,8 @@ class CellSimulator:
             logs, outs = self.step(trace[t], imgs=frame_imgs, option=option)
             for log in logs:
                 log.frame_idx = t
+                if tele is not None:
+                    tele.record_frame_log(log)
             all_logs.extend(logs)
             if keep_outputs:
                 all_outs.append(outs)

@@ -357,6 +357,43 @@ class ChaosModel:
                 out.append(f"{name}_up")
         return out
 
+    # -- telemetry track ------------------------------------------------------
+    def telemetry_events(self) -> List[Tuple[str, float, Dict[str, Any]]]:
+        """Chaos track for the telemetry plane (core/telemetry.py):
+        ground-truth outage windows as spans (attrs carry ``t1``), the
+        heartbeat detector's transition log as detect/recover instants,
+        and the failover periods (upf detection -> failback) as spans --
+        all derived AFTER the run from state the engine recorded anyway,
+        so tracing adds zero work on the hot path."""
+        ev: List[Tuple[str, float, Dict[str, Any]]] = []
+        for comp, windows in (("edge", self.edge_windows),
+                              ("upf", self.upf_windows),
+                              ("link", self.blackout_windows)):
+            for t0, t1 in windows:
+                ev.append((f"outage:{comp}", t0,
+                           {"t1": t1, "component": comp}))
+        failover_from: Optional[float] = None
+        for tr in self.transitions:
+            kind = "detect" if tr["event"] == "down" else "recover"
+            ev.append((f"{kind}:{tr['component']}", tr["t"],
+                       {"component": tr["component"],
+                        "action": tr["action"]}))
+            if tr["component"] != "upf" or not self.cfg.failover:
+                continue
+            if tr["event"] == "down" and failover_from is None \
+                    and tr["action"] != "halt":
+                failover_from = tr["t"]
+            elif tr["event"] == "up" and failover_from is not None:
+                ev.append(("failover:upf", failover_from,
+                           {"t1": tr["t"], "component": "upf"}))
+                failover_from = None
+        if failover_from is not None:     # run ended still failed over
+            t1 = max([failover_from] + [w[1] for w in self.upf_windows])
+            ev.append(("failover:upf", failover_from,
+                       {"t1": t1, "component": "upf"}))
+        ev.sort(key=lambda e: e[1])
+        return ev
+
     # -- recovery metrics -----------------------------------------------------
     def finalize(self, frames: Sequence[Any],
                  skips: Sequence[Tuple[int, int, float]]

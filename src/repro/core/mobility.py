@@ -341,6 +341,17 @@ class MobilityModel:
     def serving_path(self, u: int) -> PathModel:
         return self.sites[int(self.serving[u])].path
 
+    def telemetry_sample(self) -> dict:
+        """Cell-assignment observation for the telemetry plane
+        (core/telemetry.py counter tracks): cumulative handovers plus
+        the per-site UE census.  Pure read -- the dedicated mobility rng
+        never moves."""
+        counts = np.bincount(self.serving, minlength=self.n_sites)
+        out = {"handovers_total": float(self.handover_count.sum())}
+        for c in range(self.n_sites):
+            out[f"ues_at_site{c}"] = float(counts[c])
+        return out
+
     # -- one observation ------------------------------------------------------
     def observe(self, u: int, t: float) -> MobilityObs:
         assert self._rng is not None, "MobilityModel.reset was not called"

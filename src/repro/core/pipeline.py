@@ -334,6 +334,10 @@ class SplitInferencePipeline:
     narrowband: bool = False
     seed: int = 0
     execute_model: bool = True      # False = accounting-only (fast sweeps)
+    # telemetry plane (core/telemetry.py): a run-scoped recorder fed by
+    # run_trace / run_stream.  Hooks only read finished FrameLogs, so
+    # attaching one never perturbs the simulation (no rng draws).
+    telemetry: Optional[Any] = None
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
@@ -365,10 +369,14 @@ class SplitInferencePipeline:
     def run_trace(self, imgs, interference_trace, option: Optional[str] = None
                   ) -> List[FrameLog]:
         src = FrameSource(imgs if self.execute_model else None)
+        if self.telemetry is not None:
+            self.telemetry.begin_run("single_ue", "slot", 1)
         logs = []
         for i, lvl in enumerate(interference_trace):
             log = self.run_frame(src.frame(i), lvl, option)
             log.frame_idx = i
+            if self.telemetry is not None:
+                self.telemetry.record_frame_log(log)
             logs.append(log)
         return logs
 
@@ -390,7 +398,7 @@ class SplitInferencePipeline:
             plan=self.plan, system=self.system, codec=self.codec,
             controller=self.controller, path=self.path,
             narrowband=self.narrowband, seed=self.seed, n_ues=1,
-            execute_model=self.execute_model)
+            execute_model=self.execute_model, telemetry=self.telemetry)
         trace = np.asarray(interference_trace, float).reshape(-1, 1)
         return _run_stream(sim, trace, imgs=imgs, option=option, fps=fps,
                            jitter_s=jitter_s, inflight=inflight,

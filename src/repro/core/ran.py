@@ -659,3 +659,15 @@ class RanStream:
     @property
     def backlog_bytes(self) -> float:
         return sum(f.rem_bits for f in self._flows if not f.done) / 8.0
+
+    def telemetry_sample(self) -> Dict[str, float]:
+        """MAC-state observation for the telemetry plane
+        (core/telemetry.py counter tracks).  Pure read of scheduler
+        state -- no draws, no mutation -- and shared field-for-field
+        with the vectorized twin (core/ran_vec.py), so traces are
+        engine-agnostic."""
+        live = sum(1 for f in self._flows if not f.done)
+        return {"tti": float(self._k),
+                "backlog_bytes": float(self.backlog_bytes),
+                "live_flows": float(live),
+                "open_cohorts": float(len(self._cohort_open))}

@@ -1009,3 +1009,15 @@ class VecRanStream:
     def backlog_bytes(self) -> float:
         live = np.flatnonzero(self._rem[:self._n] > 0.0)
         return sum(float(self._rem[i]) for i in live) / 8.0
+
+    def telemetry_sample(self) -> Dict[str, float]:
+        """Twin of ``RanStream.telemetry_sample``: the identical
+        observation read from the array state (one vectorized pass, so
+        sampling a 10k-flow stream costs microseconds, not a python
+        loop).  Values match the oracle's field-for-field."""
+        n = self._n
+        live = self._rem[:n] > 0.0
+        return {"tti": float(self._k),
+                "backlog_bytes": float(self._rem[:n][live].sum() / 8.0),
+                "live_flows": float(int(live.sum())),
+                "open_cohorts": float(len(self._cohort_open))}

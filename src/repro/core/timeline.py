@@ -335,6 +335,15 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
         outages=chaos.edge_windows if chaos is not None else (),
         warmup_s=chaos.cfg.edge_warmup_s if chaos is not None else 0.0,
         drop=chaos is not None and chaos.cfg.edge_policy == "drop")
+    # telemetry plane (core/telemetry.py): every hook below is gated on
+    # the attribute and only READS timestamps this engine computes
+    # anyway -- no draws, no float feedback -- so telemetry on/off runs
+    # are bitwise identical (tests/test_telemetry.py).
+    tele = getattr(sim, "telemetry", None)
+    if tele is not None:
+        tele.begin_run(
+            "stream/" + (sim.engine if sim.ran is not None else "legacy"),
+            "absolute", n, n_cells=len(streams) if streams else 1)
     controllers = sim._controllers
     if controllers is not None:
         for u, c in enumerate(controllers):
@@ -393,14 +402,17 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
             return
         by_req[id(req)] = fr
 
-    def deliver(flows, strm):
+    def deliver(flows, strm, ci: int = 0):
         """MAC completions -> grant feedback + edge arrivals.  ``tx_s``
         spans from the frame's ORIGINAL encode-done instant, so a
         migrated flow's report covers the relocation gap and both cells'
         scheduling (the report's own enqueue re-anchors at adoption)."""
+        by_cohort: Dict[int, List[Any]] = {}
         for f in flows:
             fr: _Frame = f.meta
             rep = strm.report(f)
+            if tele is not None:
+                by_cohort.setdefault(f.cohort, []).append(rep)
             fr.tx_s = float(rep.finish_s - fr.enq_s)
             fr.rate_bps = (rep.n_bytes * 8.0 / fr.tx_s) if fr.tx_s > 0 \
                 else 0.0
@@ -422,12 +434,17 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
                     lose(fr, float(rep.finish_s), "upf_outage")
                     continue
             submit(fr)
+        if tele is not None:
+            for coh in sorted(by_cohort):
+                tele.mac_cohort(ci, coh, by_cohort[coh])
 
     def serve(batches):
         """Edge executions -> frame completions."""
         for rec, served in batches:
             if chaos is not None:
                 chaos.straggler.record(EDGE_WORKER, rec.compute_s)
+            if tele is not None:
+                tele.edge_batch(rec)
             sim.stats.absorb_batch(rec, [s for _, s in served])
             for req, sv in served:
                 fr = by_req.pop(id(req))
@@ -468,9 +485,20 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
         #    would -- flush membership is monotone in the watermark -- so
         #    an inert chaos schedule stays bitwise.)
         if streams is not None:
-            for s, hr in zip(streams, harq_rngs):
-                deliver(s.advance(t, hr), s)
+            for ci, (s, hr) in enumerate(zip(streams, harq_rngs)):
+                deliver(s.advance(t, hr), s, ci)
         serve(edge.flush(t))
+        if tele is not None:
+            # KPM counter tracks on the sim clock: MAC backlog / live
+            # flows per cell (ran.py & ran_vec.py expose the identical
+            # observation), edge congestion, cell assignment
+            if streams is not None:
+                for ci, s in enumerate(streams):
+                    tele.mac_sample(ci, t, s.telemetry_sample())
+            tele.sample(t, "edge_pending", edge.n_pending)
+            if mob is not None:
+                for k, v in mob.telemetry_sample().items():
+                    tele.sample(t, k, v)
 
         # 1a. chaos events at this instant fire BEFORE the captures they
         #     gate.  Heartbeats run the detector (runtime/failures.py) on
@@ -545,6 +573,9 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
                 outcome[u] = None            # old cell's grants are stale
                 if controllers is not None:
                     controllers[u].notify_handover()
+                if tele is not None:
+                    tele.instant("handover", ev.t_s, ue=u, cell=ev.to_cell,
+                                 from_cell=ev.from_cell, gap_s=ev.gap_s)
 
         # 2. admission: absent (churned-out) UEs produce no frame at all
         #    -- the camera is not in the cell -- then skip when the
@@ -737,8 +768,8 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
 
     # drain: whatever is still in the air or queued at the edge
     if streams is not None:
-        for s, hr in zip(streams, harq_rngs):
-            deliver(s.advance(math.inf, hr), s)
+        for ci, (s, hr) in enumerate(zip(streams, harq_rngs)):
+            deliver(s.advance(math.inf, hr), s, ci)
     serve(edge.flush(math.inf))
     assert edge.n_pending == 0 and all(fr.final for fr in frames), \
         "event engine ended with unfinished frames"
@@ -761,6 +792,9 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
             dropped=bool(fr.drop_reason), drop_reason=fr.drop_reason))
     logs.extend(dropped_logs)
     logs.sort(key=lambda l: (l.frame_idx, l.ue_id))
+    if tele is not None:
+        for log in logs:
+            tele.record_frame_log(log)
 
     st = sim.stats
     st.n_frames = n_frames
@@ -799,6 +833,8 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
         recovery = chaos.finalize(frames, skips)
         st.n_outages = (len(chaos.edge_windows) + len(chaos.upf_windows)
                         + len(chaos.blackout_windows))
+        if tele is not None:
+            tele.record_chaos(chaos)
 
     outputs = None
     if keep_outputs:

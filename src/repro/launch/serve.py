@@ -2,26 +2,50 @@
 optionally split across a simulated UE/edge boundary with the paper's
 codec on the handoff.
 
+The driver feeds a ``MetricsRegistry`` (core/telemetry.py) — prefill/decode
+latency histograms, token and boundary-byte counters — and surfaces the
+snapshot on its status path: ``status(registry)`` is the dict a /status
+endpoint would serve, ``--status-out status.json`` writes it after the
+run (round-tripped in tests/test_telemetry.py).
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-        --prompt-len 32 --gen 16 --batch 4 [--split 0.5]
+        --prompt-len 32 --gen 16 --batch 4 [--split 0.5] \
+        [--status-out status.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from typing import Dict, Optional
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--split", type=float, default=0.0,
-                    help="fraction of layers on the UE side (0 = no split)")
-    args = ap.parse_args(argv)
+def make_registry():
+    """The serving plane's registry: fixed-edge latency histograms (seconds)
+    plus throughput counters.  Callers pass measured durations in; the
+    registry itself never reads a clock."""
+    from repro.core.telemetry import MetricsRegistry
 
+    reg = MetricsRegistry()
+    reg.histogram("prefill_s")       # default fixed LATENCY_EDGES_S buckets
+    reg.histogram("decode_step_s")
+    reg.counter("tokens_generated_total")
+    reg.counter("requests_total")
+    reg.counter("boundary_raw_bytes_total")
+    reg.counter("boundary_compressed_bytes_total")
+    return reg
+
+
+def status(registry) -> Dict:
+    """The status-path payload: run metadata + the full registry snapshot.
+    JSON-serializable by construction (asserted round-trip in tests)."""
+    snap = registry.snapshot()
+    toks = snap["counters"].get("tokens_generated_total", 0)
+    return {"status": "ok", "metrics": snap,
+            "tokens_generated": toks}
+
+
+def serve(args, registry=None) -> Dict:
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -33,6 +57,7 @@ def main(argv=None):
     from repro.launch.steps import build_decode_step, build_prefill
     from repro.models.registry import get_model
 
+    reg = registry if registry is not None else make_registry()
     cfg = (get_reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
     model = get_model(cfg)
@@ -42,6 +67,7 @@ def main(argv=None):
                        global_batch=args.batch, kind="prefill")
     params = model.init(jax.random.PRNGKey(0))
     batch = model.concrete(model.prefill_inputs(shape))
+    reg.counter("requests_total").inc(args.batch)
 
     if args.split > 0:
         # the paper's technique on the LM: head layers on the UE, boundary
@@ -55,6 +81,9 @@ def main(argv=None):
         comp = codec.compress(payload)
         logits = plan.tail(codec.decompress(comp), split_option(l))
         dt = time.perf_counter() - t0
+        reg.counter("boundary_raw_bytes_total").inc(comp.raw_bytes)
+        reg.counter("boundary_compressed_bytes_total").inc(
+            comp.compressed_bytes)
         print(f"split at layer {l}/{cfg.n_layers}: boundary "
               f"{comp.raw_bytes / 1e6:.2f} MB -> {comp.compressed_bytes / 1e6:.2f} MB "
               f"({100 * (1 - comp.ratio):.1f}% reduction), "
@@ -70,12 +99,14 @@ def main(argv=None):
         logits, caches = prefill(params, batch)
         logits.block_until_ready() if hasattr(logits, "block_until_ready") else None
         t_prefill = time.perf_counter() - t0
+        reg.histogram("prefill_s").observe(t_prefill)
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         if cfg.n_codebooks:
             tok = tok.reshape(args.batch, 1, cfg.n_codebooks)
         outs = []
         t0 = time.perf_counter()
         for i in range(args.gen):
+            ts = time.perf_counter()
             step_batch = {"tokens": tok}
             logits, caches = decode(params, caches, step_batch,
                                     jnp.asarray(args.prompt_len + i, jnp.int32))
@@ -86,10 +117,35 @@ def main(argv=None):
             else:
                 tok = tok.reshape(args.batch, 1)
             outs.append(np.asarray(tok)[:, 0])
+            reg.histogram("decode_step_s").observe(time.perf_counter() - ts)
+            reg.counter("tokens_generated_total").inc(args.batch)
         t_dec = time.perf_counter() - t0
     print(f"prefill {args.batch}x{args.prompt_len}: {t_prefill * 1e3:.0f} ms; "
           f"decode {args.gen} steps: {t_dec / args.gen * 1e3:.1f} ms/tok")
     print("sample tokens:", np.stack(outs)[:8, 0].tolist())
+    return status(reg)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--split", type=float, default=0.0,
+                    help="fraction of layers on the UE side (0 = no split)")
+    ap.add_argument("--status-out", default=None, metavar="STATUS.JSON",
+                    help="write the status-path payload (metrics-registry "
+                         "snapshot) here after the run")
+    args = ap.parse_args(argv)
+
+    payload = serve(args)
+    if args.status_out:
+        with open(args.status_out, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"status -> {args.status_out} "
+              f"({payload['tokens_generated']} tokens)")
     return 0
 
 

@@ -100,27 +100,29 @@ def _trace():
                      [-30.0, -40.0, -10.0]])
 
 
-def legacy_lockstep_result():
+def legacy_lockstep_result(telemetry=None):
     system = _system()
     plan = SwinSplitPlan(SWIN_FULL, params=None)
     sim = CellSimulator(plan=plan, system=system, n_ues=3, seed=11,
                         execute_model=False,
-                        controller=_controller(system))
+                        controller=_controller(system),
+                        telemetry=telemetry)
     return sim.run(_trace())
 
 
-def ran_streaming_result():
+def ran_streaming_result(telemetry=None, engine="python"):
     system = _system()
     plan = SwinSplitPlan(SWIN_FULL, params=None)
     sim = CellSimulator(plan=plan, system=system, n_ues=3, seed=11,
                         execute_model=False, frame_budget_s=3.0,
                         ran=RanCell(policy=make_policy("edf"),
-                                    cfg=RanConfig(tti_s=0.005)))
+                                    cfg=RanConfig(tti_s=0.005)),
+                        engine=engine, telemetry=telemetry)
     return sim.run_stream(_trace(), option="split3", fps=0.4,
                           jitter_s=0.05, inflight=2)
 
 
-def chaos_outage_result():
+def chaos_outage_result(telemetry=None):
     from repro.core.chaos import (ChaosConfig, ChaosModel, ChurnSpec,
                                   OutageSpec)
     from repro.core.channel import cupf_path
@@ -139,7 +141,7 @@ def chaos_outage_result():
                         controller=_controller(system),
                         ran=RanCell(policy=make_policy("edf"),
                                     cfg=RanConfig(tti_s=0.005)),
-                        chaos=chaos)
+                        chaos=chaos, telemetry=telemetry)
     return sim.run_stream(np.tile(_trace(), (2, 1)), option=None,
                           fps=0.4, jitter_s=0.05, inflight=2)
 

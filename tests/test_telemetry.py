@@ -1,0 +1,283 @@
+"""Telemetry plane (core/telemetry.py + core/trace_export.py).
+
+The tentpole's contract, asserted here:
+
+  * **Zero perturbation.**  Telemetry attached => the same FrameLogs,
+    field-exact against the COMMITTED goldens (tests/goldens/), across
+    the legacy lock-step, RAN-streaming (python AND vectorized MAC) and
+    chaos engines.  Every hook is a pure observer: no rng draws, no
+    float feedback, so on/off runs are bitwise identical.
+  * **Span accounting.**  Stage spans tile each frame's capture->done
+    interval exactly (account_stage's additive identity), so every
+    missed frame's capture->deadline interval is covered >= 99% by
+    spans -- the acceptance bar, met here at 100% by construction.
+  * **Cause attribution.**  Deadline misses and losses carry one cause
+    from the fixed taxonomy; a chaos outage window shows up on the
+    control track as outage span -> detect instant -> failover span ->
+    recover instant.
+  * **Deterministic metrics.**  Histograms use fixed bucket edges and
+    never read a wall clock; the registry snapshot JSON round-trips.
+  * **Valid exports.**  Chrome-trace JSON passes the schema validator;
+    the JSONL exporter emits one well-formed record per event.
+"""
+import json
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+from repro.core import telemetry as T
+from repro.core import trace_export as TX
+from repro.core.telemetry import MetricsRegistry, Telemetry, miss_cause
+
+from test_goldens import (EXTRA_FIELDS, SCENARIOS, chaos_outage_result,
+                          load_golden, log_to_dict, ran_streaming_result)
+
+TRACED_SCENARIOS = dict(
+    SCENARIOS,
+    ran_streaming_vec=lambda telemetry=None: ran_streaming_result(
+        telemetry, engine="vectorized"),
+)
+# the vectorized MAC replays the python engine's trace field-exactly, so
+# it asserts against the same committed fixture
+GOLDEN_OF = {"ran_streaming_vec": "ran_streaming"}
+
+
+# ---------------------------------------------------------------------------
+# zero perturbation: telemetry on == committed goldens
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TRACED_SCENARIOS))
+def test_telemetry_on_replays_the_golden_field_exact(name):
+    """Attaching the telemetry plane must not move a single field of a
+    single log: the traced run replays the committed golden byte-for-
+    byte (the telemetry-OFF side of the guarantee is test_goldens.py
+    itself, which runs these scenarios with telemetry=None)."""
+    golden_name = GOLDEN_OF.get(name, name)
+    want = load_golden(golden_name)
+    tele = Telemetry()
+    res = TRACED_SCENARIOS[name](telemetry=tele)
+    extra = EXTRA_FIELDS.get(golden_name, ())
+    got = [log_to_dict(l, extra) for l in res.logs]
+    assert len(got) == len(want)
+    for i, (g, w) in enumerate(zip(got, want)):
+        for k in sorted(w):
+            gv, wv = g[k], w[k]
+            if isinstance(wv, float) and math.isnan(wv):
+                assert isinstance(gv, float) and math.isnan(gv)
+            else:
+                assert gv == wv, f"{name}[{i}].{k}: {gv!r} != golden {wv!r}"
+    # and the trace actually recorded the run
+    assert len(tele.spans) > 0
+    assert tele.registry.counter("frames_total").value == len(res.logs)
+
+
+@pytest.mark.parametrize("name", sorted(TRACED_SCENARIOS))
+def test_chrome_trace_export_is_valid(name):
+    tele = Telemetry()
+    TRACED_SCENARIOS[name](telemetry=tele)
+    trace = TX.chrome_trace(tele)
+    errs = TX.validate_chrome_trace(trace)
+    assert errs == [], errs
+    evs = trace["traceEvents"]
+    # one complete-event track name per UE span category at minimum
+    assert any(e["ph"] == "X" for e in evs)
+    assert any(e["ph"] == "M" for e in evs)       # process/thread names
+
+
+def test_chrome_trace_round_trips_through_a_file(tmp_path):
+    tele = Telemetry()
+    ran_streaming_result(telemetry=tele)
+    path = str(tmp_path / "trace.json")
+    TX.write_chrome_trace(tele, path)
+    assert TX.validate_chrome_trace(path) == []
+    with open(path) as f:
+        trace = json.load(f)
+    assert trace["otherData"]["engine"] == "stream/python"
+
+
+def test_jsonl_export(tmp_path):
+    tele = Telemetry()
+    ran_streaming_result(telemetry=tele)
+    path = str(tmp_path / "trace.jsonl")
+    TX.write_jsonl(tele, path)
+    with open(path) as f:
+        records = [json.loads(line) for line in f]
+    kinds = {r["kind"] for r in records}
+    assert {"meta", "span", "snapshot"} <= kinds
+    n_spans = sum(1 for r in records if r["kind"] == "span")
+    assert n_spans == len(tele.spans)
+
+
+# ---------------------------------------------------------------------------
+# span accounting: coverage of missed frames
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["ran_streaming", "chaos_outage"])
+def test_missed_frames_are_fully_accounted(name):
+    """Acceptance bar: spans cover >= 99% of each missed frame's
+    capture->deadline interval.  The stage decomposition is additive and
+    lost frames get a terminal cause span, so actual coverage is 1.0."""
+    tele = Telemetry()
+    res = SCENARIOS[name](telemetry=tele)
+    cov = tele.coverage(res.logs)
+    missed = [l for l in res.logs
+              if l.deadline_miss and l.deadline_s != float("inf")]
+    assert len(missed) > 0, "scenario stopped exercising the miss path"
+    assert len(cov) == len(missed)
+    for key, frac in cov.items():
+        assert frac >= 0.99, (key, frac)
+
+
+def test_miss_causes_come_from_the_taxonomy():
+    tele = Telemetry()
+    res = SCENARIOS["chaos_outage"](telemetry=tele)
+    causes = tele.miss_summary(res.logs)
+    assert causes, "chaos scenario produced no misses"
+    assert set(causes) <= set(T.CAUSES)
+    # the chaos fixture pins one loss per injected fault
+    assert T.CAUSE_EDGE_OUT in causes
+    assert T.CAUSE_UPF_OUT in causes
+    for log in res.logs:
+        assert miss_cause(log) in T.CAUSES
+
+
+# ---------------------------------------------------------------------------
+# chaos attribution: outage -> detect -> failover -> recover on the track
+# ---------------------------------------------------------------------------
+
+def test_chaos_outage_window_is_attributed():
+    tele = Telemetry()
+    chaos_outage_result(telemetry=tele)
+    chaos_spans = [s for s in tele.spans if s.cat == "chaos"]
+    names = {s.name for s in chaos_spans}
+    assert "outage:edge" in names
+    assert "outage:upf" in names
+    assert "failover:upf" in names
+    inst = {e["name"] for e in tele.instants}
+    assert "detect:edge" in inst and "detect:upf" in inst
+    assert "recover:edge" in inst
+
+    # ordering within the dUPF fault: outage start <= detection < failover
+    # end, and the failover span sits inside [detect, recover]
+    out = next(s for s in chaos_spans if s.name == "outage:upf")
+    fo = next(s for s in chaos_spans if s.name == "failover:upf")
+    detects = [e["t"] for e in tele.instants if e["name"] == "detect:upf"]
+    assert detects, "no dUPF detection instant"
+    t_detect = min(d for d in detects if d >= out.t0 - 1e-9)
+    assert out.t0 <= t_detect <= out.t1 + 1e-9, "detected outside the window"
+    assert abs(fo.t0 - t_detect) < 1e-9, "failover must start at detection"
+    assert fo.t1 > fo.t0, "failover window must be non-empty"
+
+    # drop cause spans for frames destroyed inside the windows
+    drops = {s.name for s in tele.spans if s.cat == "cause"}
+    assert any(n.startswith("drop:edge_outage") for n in drops)
+    assert any(n.startswith("drop:upf_outage") for n in drops)
+
+
+def test_streaming_run_records_mac_and_edge_tracks():
+    tele = Telemetry()
+    ran_streaming_result(telemetry=tele)
+    cats = {s.cat for s in tele.spans}
+    assert {"frame", "mac", "edge"} <= cats
+    # counter tracks sampled on the sim clock
+    names = {n for _t, n, _c, _v in tele.samples}
+    assert "mac_backlog_bytes" in names
+    assert "edge_pending" in names
+    snap = tele.registry.snapshot()
+    assert snap["counters"]["frames_total"] > 0
+    assert "frame_delay_s" in snap["histograms"]
+
+
+# ---------------------------------------------------------------------------
+# metrics registry determinism
+# ---------------------------------------------------------------------------
+
+def test_histogram_binning_is_deterministic_and_fixed_edge():
+    h = T.Histogram(edges=(1.0, 2.0, 5.0))
+    for v in (0.5, 1.0, 1.5, 2.0, 4.9, 5.0, 100.0):
+        h.observe(v)
+    # bucket i counts v <= edges[i]; the last bucket is overflow
+    assert list(h.counts) == [2, 2, 2, 1]
+    assert h.count == 7
+    assert h.sum == pytest.approx(114.9)
+
+    h2 = T.Histogram(edges=(1.0, 2.0, 5.0))
+    h2.observe_many(np.array([0.5, 1.0, 1.5, 2.0, 4.9, 5.0, 100.0]))
+    assert list(h2.counts) == list(h.counts)
+    assert h2.sum == pytest.approx(h.sum)
+
+    with pytest.raises(ValueError):
+        T.Histogram(edges=(2.0, 1.0))          # edges must be increasing
+
+
+def test_registry_snapshot_round_trips_and_rejects_edge_changes():
+    reg = MetricsRegistry()
+    reg.counter("a").inc()
+    reg.counter("a").inc(2.5)
+    reg.gauge("g").set(-3.0)
+    reg.histogram("h", (0.1, 1.0)).observe(0.05)
+    snap = reg.snapshot()
+    assert snap == json.loads(json.dumps(snap))
+    assert snap["counters"]["a"] == 3.5
+    assert snap["gauges"]["g"] == -3.0
+    assert snap["histograms"]["h"]["counts"] == [1, 0, 0]
+    with pytest.raises(ValueError):
+        reg.histogram("h", (0.2, 2.0))
+
+    # identical observation sequence => identical snapshot (mid-run
+    # snapshots are pure functions of the observations, never of time)
+    reg2 = MetricsRegistry()
+    reg2.counter("a").inc()
+    reg2.counter("a").inc(2.5)
+    reg2.gauge("g").set(-3.0)
+    reg2.histogram("h", (0.1, 1.0)).observe(0.05)
+    assert reg2.snapshot() == snap
+
+
+# ---------------------------------------------------------------------------
+# serve.py status path round-trip (no model run: the registry IS the path)
+# ---------------------------------------------------------------------------
+
+def test_serve_status_round_trip():
+    from repro.launch.serve import make_registry, status
+    reg = make_registry()
+    reg.histogram("prefill_s").observe(0.21)
+    for dt in (0.011, 0.012, 0.013):
+        reg.histogram("decode_step_s").observe(dt)
+        reg.counter("tokens_generated_total").inc(4)
+    reg.counter("requests_total").inc(4)
+    payload = status(reg)
+    decoded = json.loads(json.dumps(payload))
+    assert decoded == payload
+    assert decoded["status"] == "ok"
+    assert decoded["tokens_generated"] == 12
+    hist = decoded["metrics"]["histograms"]["decode_step_s"]
+    assert sum(hist["counts"]) == 3
+    assert hist["sum"] == pytest.approx(0.036)
+
+
+# ---------------------------------------------------------------------------
+# bench artifact schema (benchmarks/check_results.py)
+# ---------------------------------------------------------------------------
+
+def test_committed_bench_artifacts_conform():
+    from benchmarks.check_results import check
+    results = os.path.join(os.path.dirname(__file__), os.pardir, "results")
+    assert check(results) == []
+
+
+def test_schema_checker_flags_violations(tmp_path):
+    from benchmarks.check_results import check
+    (tmp_path / "bench_scale.json").write_text('{"config": {}}')
+    (tmp_path / "bench_broken.json").write_text("{nope")
+    (tmp_path / "bench_empty.json").write_text("{}")
+    errs = check(str(tmp_path))
+    assert any("bench_scale" in e and "missing" in e for e in errs)
+    assert any("bench_broken" in e and "unparseable" in e for e in errs)
+    assert any("bench_empty" in e for e in errs)
+    assert check(str(tmp_path / "nowhere")) != []
