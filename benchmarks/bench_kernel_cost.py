@@ -21,6 +21,13 @@ Three cross-checks anchor the acceptance:
 Writes results/bench_kernel_cost.json with {config, hlo, roofline} --
 the schema checked by benchmarks/check_results.py.
 
+``run_head_fused`` times the fused Swin head (one jitted device call for
+head + int8 quant epilogue, DESIGN.md §13) against the pre-fusion
+baseline (eager XLA-attention head + separate codec launch) per split
+boundary, asserts the payload bytes are identical to the unfused jitted
+path, and writes results/bench_head_fused[_fast].json with
+{config, rows, acceptance}.
+
     PYTHONPATH=src python -m benchmarks.bench_kernel_cost
 """
 from __future__ import annotations
@@ -110,5 +117,99 @@ def run(fast: bool = True) -> str:
                     f"useful={row['useful_ratio']:.3f}")
 
 
+def run_head_fused(fast: bool = True) -> str:
+    """Fused head->encode vs the pre-fusion baseline, per split boundary.
+
+    baseline: eager ``SW.head_apply`` with ``attn_impl='xla'`` (what
+    ``SwinSplitPlan.head`` ran before the trace cache + fused launch)
+    followed by a separate ``codec.compress`` call.
+    fused:    ``codec.compress_head(plan.head_jitted(opt), ...)`` -- ONE
+    jitted device call covering head + int8 quant epilogue.
+
+    Byte-identity is asserted against the unfused JITTED same-config path
+    (``codec.compress(plan.head_jitted(opt)(params, img))``): jit-vs-eager
+    float drift makes the eager baseline a timing anchor only.
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs.swin_t_detection import reduced
+    from repro.core.compression import ActivationCodec
+    from repro.core.splitting import SwinSplitPlan, split_option
+    from repro.models import swin as SW
+
+    cfg = reduced()
+    cfg_x = dataclasses.replace(cfg, attn_impl="xla")
+    params = SW.init(cfg, jax.random.PRNGKey(0))
+    img = jax.random.uniform(jax.random.PRNGKey(1),
+                             (1, cfg.img_h, cfg.img_w, 3))
+    plan = SwinSplitPlan(cfg, params, include_early_split=True)
+    codec = ActivationCodec()
+    assert codec.supports_fused()
+
+    reps = 3 if fast else 10
+    splits = (1, 3) if fast else tuple(range(cfg.n_stages + 1))
+    rows = []
+    for l in splits:
+        opt = split_option(l)
+        producer = plan.head_jitted(opt)
+
+        def baseline():
+            tree = SW.head_apply(cfg_x, params, img, l)   # eager, XLA attn
+            return codec.compress(tree)                   # separate launch
+
+        def fused():
+            comp, _ = codec.compress_head(producer, params, img)
+            return comp
+
+        comp_b = baseline()                               # warmup both
+        comp_f = fused()
+        comp_j = codec.compress(producer(params, img))    # unfused jitted
+        assert comp_f.blobs == comp_j.blobs, \
+            f"{opt}: fused payload bytes diverged from the unfused path"
+        assert comp_f.raw_bytes == comp_b.raw_bytes
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            baseline()
+        base_s = (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fused()
+        fused_s = (time.perf_counter() - t0) / reps
+        rows.append({
+            "option": opt, "base_ms": base_s * 1e3, "fused_ms": fused_s * 1e3,
+            "speedup": base_s / fused_s,
+            "raw_bytes": comp_f.raw_bytes,
+            "compressed_bytes": comp_f.compressed_bytes,
+            "byte_identical": True,
+        })
+        print(f"  {opt}: base={base_s * 1e3:.1f}ms fused={fused_s * 1e3:.1f}ms "
+              f"speedup={base_s / fused_s:.1f}x")
+
+    min_speedup = min(r["speedup"] for r in rows)
+    assert min_speedup >= 2.0, \
+        f"fused head speedup floor 2.0x not met: {min_speedup:.2f}x"
+    payload = {
+        "config": {
+            "arch": cfg.name, "img": [cfg.img_h, cfg.img_w],
+            "reps": reps, "fast": bool(fast), "mode": codec.mode,
+            "baseline": "eager head_apply (attn_impl=xla) + separate compress",
+        },
+        "rows": rows,
+        "acceptance": {
+            "min_speedup": min_speedup,
+            "speedup_floor": 2.0,
+            "byte_identical": all(r["byte_identical"] for r in rows),
+        },
+    }
+    save("bench_head_fused_fast" if fast else "bench_head_fused", payload)
+    return csv_line("head_fused", rows[0]["fused_ms"] * 1e3,
+                    f"min_speedup={min_speedup:.1f}x;byte_identical=1")
+
+
 if __name__ == "__main__":
     print(run(fast=False))
+    print(run_head_fused(fast=False))

@@ -27,6 +27,8 @@ from typing import Dict, List, Tuple
 REQUIRED: Dict[str, Tuple[str, ...]] = {
     "bench_chaos": ("config", "acceptance"),
     "bench_chaos_fast": ("config", "acceptance"),
+    "bench_head_fused": ("config", "rows", "acceptance"),
+    "bench_head_fused_fast": ("config", "rows", "acceptance"),
     "bench_kernel_cost": ("config", "hlo", "roofline"),
     "bench_mobility": ("config", "acceptance"),
     "bench_ran": ("config", "acceptance"),

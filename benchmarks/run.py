@@ -70,6 +70,12 @@ def main() -> int:
         # smoke exercises both formerly write-only modules and commits
         # results/bench_kernel_cost.json
         ("kernel_cost", lambda: bench_kernel_cost.run(fast=True)),
+        # fused Swin head (one device call for head + int8 quant epilogue,
+        # DESIGN.md §13) vs the eager-XLA + separate-quant baseline:
+        # asserts payload byte-identity and the 2x speedup floor; the
+        # all-splits full run is the module's __main__ and commits
+        # results/bench_head_fused.json
+        ("head_fused", lambda: bench_kernel_cost.run_head_fused(fast=True)),
     ]
     if args.only:
         benches = [(n, f) for n, f in benches if args.only in n]

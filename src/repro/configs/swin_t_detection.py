@@ -30,7 +30,7 @@ class SwinConfig:
     fpn_dim: int = 256
     dtype: str = "float32"
     norm_eps: float = 1e-5
-    attn_impl: str = "xla"   # xla | pallas
+    attn_impl: str = "pallas"   # pallas (fused one-launch, DESIGN.md §13) | xla
 
     @property
     def n_stages(self) -> int:

@@ -63,6 +63,7 @@ from repro.core.compression import ActivationCodec
 from repro.core.mobility import MobilityModel
 from repro.core.ran import GrantReport, MultiCell, RanCell, UplinkRequest
 from repro.core.pipeline import (EncodeResult, FrameLog, FrameSource,
+                                 head_encode_stage,
                                  HeadResult, UplinkResult, account_stage,
                                  decide_stage, encode_group_stage,
                                  encode_stage, sense_stage)
@@ -338,6 +339,13 @@ class CellSimulator:
     narrowband: Any = False       # scalar or per-UE array of bool
     seed: int = 0
     execute_model: bool = False
+    # run each UE's head + int8 quant epilogue as ONE jitted device call
+    # (pipeline.head_encode_stage).  Off by default here: the lock-step
+    # engine's group-encode path (one fused codec launch per option) is
+    # the calibrated baseline; the fused head trades that grouping for a
+    # single trace per (option, ship_merged).  Payload bytes are
+    # identical either way (DESIGN.md §13).
+    fused_head: bool = False
     batching: bool = True
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS
     max_wait_s: float = 0.050
@@ -510,19 +518,29 @@ class CellSimulator:
             options = [option] * n
 
         # --- head (real per UE, or table lookups) ----------------------------
-        heads: List[HeadResult] = []
+        heads: List[HeadResult] = [None] * n           # type: ignore[list-item]
+        encs: List[EncodeResult] = [None] * n          # type: ignore[list-item]
+        fused = self.execute_model and self.fused_head
         for i, opt in enumerate(options):
-            if self.execute_model:
+            if fused:
+                # one device call covers head + quant epilogue; the
+                # payload bytes match the group-encode path bit-for-bit
+                heads[i], encs[i] = head_encode_stage(
+                    self.plan, self.system, self.codec,
+                    imgs[i % len(imgs)], opt, True,
+                    self._controllers[i] if self._controllers else None)
+            elif self.execute_model:
                 payload, local = self.plan.head(imgs[i % len(imgs)], opt)
-                heads.append(HeadResult(head_s=self._head_s[opt],
-                                        payload=payload, local_out=local))
+                heads[i] = HeadResult(head_s=self._head_s[opt],
+                                      payload=payload, local_out=local)
             else:
-                heads.append(HeadResult(head_s=self._head_s[opt], payload=None,
-                                        local_out=None))
+                heads[i] = HeadResult(head_s=self._head_s[opt], payload=None,
+                                      local_out=None)
 
         # --- encode: same-option payloads share ONE fused codec launch -------
-        encs: List[EncodeResult] = [None] * n          # type: ignore[list-item]
-        if self.execute_model:
+        if fused:
+            pass                       # encs already filled by the fused head
+        elif self.execute_model:
             by_option: Dict[str, List[int]] = {}
             for i, opt in enumerate(options):
                 by_option.setdefault(opt, []).append(i)

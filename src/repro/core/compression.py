@@ -159,34 +159,60 @@ def _spatial_delta_invert(d_seg, shape, n, delta_axis):
     return jnp.concatenate([q, d_seg[n:].astype(jnp.int8)])
 
 
+def _encode_leaves(leaves, block: int, delta: bool, layout: str):
+    """Traceable encode body shared by every fused entry point: pack the
+    leaves into one block-aligned stream, quantize in a single launch, and
+    (for 'spatial') apply the per-leaf delta epilogue in the same trace."""
+    segs, spans = [], []
+    for x in leaves:
+        flat = jnp.asarray(x).astype(jnp.float32).reshape(-1)
+        pad = (-flat.shape[0]) % block
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        segs.append(flat)
+        spans.append(flat.shape[0])
+    total = sum(spans)
+    if total == 0:
+        return (jnp.zeros((0,), jnp.uint8 if delta else jnp.int8),
+                jnp.zeros((0,), jnp.float32))
+    flat = segs[0] if len(segs) == 1 else jnp.concatenate(segs)
+    if not delta or layout == "block":
+        return ops.codec_encode(flat, block=block, delta=delta)
+    q, scales = ops.codec_encode(flat, block=block, delta=False)
+    outs, off = [], 0
+    for x, span in zip(leaves, spans):
+        outs.append(_spatial_delta_apply(
+            jax.lax.slice(q, (off,), (off + span,)),
+            tuple(x.shape), int(x.size)))
+        off += span
+    return jnp.concatenate(outs), scales
+
+
 @functools.lru_cache(maxsize=64)
 def _fused_encode_fn(block: int, delta: bool, layout: str):
     @jax.jit
     def encode(leaves):
-        segs, spans = [], []
-        for x in leaves:
-            flat = jnp.asarray(x).astype(jnp.float32).reshape(-1)
-            pad = (-flat.shape[0]) % block
-            if pad:
-                flat = jnp.pad(flat, (0, pad))
-            segs.append(flat)
-            spans.append(flat.shape[0])
-        total = sum(spans)
-        if total == 0:
-            return (jnp.zeros((0,), jnp.uint8 if delta else jnp.int8),
-                    jnp.zeros((0,), jnp.float32))
-        flat = segs[0] if len(segs) == 1 else jnp.concatenate(segs)
-        if not delta or layout == "block":
-            return ops.codec_encode(flat, block=block, delta=delta)
-        q, scales = ops.codec_encode(flat, block=block, delta=False)
-        outs, off = [], 0
-        for x, span in zip(leaves, spans):
-            outs.append(_spatial_delta_apply(
-                jax.lax.slice(q, (off,), (off + span,)),
-                tuple(x.shape), int(x.size)))
-            off += span
-        return jnp.concatenate(outs), scales
+        return _encode_leaves(leaves, block, delta, layout)
     return encode
+
+
+# keyed on the producer OBJECT (a cached jitted closure from e.g.
+# models/swin.head_apply_jit, so identity is stable across frames); bounded
+# only to stop executable accumulation if a caller churns through ad-hoc
+# producers
+@functools.lru_cache(maxsize=64)
+def _fused_producer_encode_fn(producer, block: int, delta: bool, layout: str):
+    """ONE jitted call running producer(params, inputs) AND the quant
+    epilogue: the boundary activations are consumed straight out of the
+    producer's trace -- no second dispatch, no intermediate host hop.
+    Returns (tree, stream, scales)."""
+    @jax.jit
+    def run(params, inputs):
+        tree = producer(params, inputs)
+        leaves = tuple(jnp.asarray(x) for x in jax.tree.leaves(tree))
+        stream, scales = _encode_leaves(leaves, block, delta, layout)
+        return tree, stream, scales
+    return run
 
 
 # bounded: adaptive cell runs produce a new segment layout whenever a
@@ -336,6 +362,43 @@ class ActivationCodec:
                                     delta_axis=delta_axis))
         return CompressedPayload(blobs, scales, metas, raw, treedef,
                                  mode=self.mode)
+
+    # -- fused head->encode (one device call for model + quant) --------------
+    def supports_fused(self) -> bool:
+        """True when this codec's mode runs the single-stream fused layout
+        (the precondition for ``compress_head``)."""
+        return self._use_fused()
+
+    def compress_head(self, producer, params, inputs):
+        """Run ``producer(params, inputs)`` (a stable jitted callable, e.g.
+        ``SwinSplitPlan.head_jitted``) with the int8 quant epilogue fused
+        into the SAME jitted computation, so encode starts on-device with
+        zero extra passes.  Returns (CompressedPayload, producer_tree).
+
+        Byte-identity: the fused trace embeds the producer's own trace
+        unchanged and the packed stream leaves the device through the same
+        ``_encode_leaves`` graph ``compress`` uses, so blobs/scales/metas
+        are byte-identical to ``compress(producer(params, inputs))``
+        (pinned across every split in tests/test_swin.py)."""
+        if not self._use_fused():
+            tree = producer(params, inputs)
+            return self.compress(tree), tree
+        delta = self.mode == "int8_delta_zlib"
+        tree, stream, scales = _fused_producer_encode_fn(
+            producer, self.quant_block, delta, self.delta_layout)(
+            params, inputs)
+        leaves, treedef = jax.tree.flatten(tree)
+        stream, scales = jax.device_get((stream, scales))   # one transfer
+        metas, raw, _ = _segment_metas(
+            leaves, self.quant_block,
+            record_delta=delta and self.delta_layout == "spatial")
+        buf = stream.tobytes()
+        blob = buf if self.mode == "int8" else zlib.compress(buf, self.level)
+        return (CompressedPayload([blob], [scales], metas, raw, treedef,
+                                  mode=self.mode, fused=True,
+                                  delta_layout=self.delta_layout if delta
+                                  else None),
+                tree)
 
     # -- batch-group compress (one launch across many payloads) -------------
     def compress_group(self, trees: Sequence[Any]) -> List[CompressedPayload]:

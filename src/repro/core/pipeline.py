@@ -202,6 +202,41 @@ def encode_stage(plan: SplitPlan, system: Calibrated, codec: ActivationCodec,
     return EncodeResult(0.010, raw, comp, payload)
 
 
+def head_encode_stage(plan: SplitPlan, system: Calibrated,
+                      codec: ActivationCodec, img, option: str,
+                      execute_model: bool,
+                      controller: Optional[AdaptiveController] = None
+                      ) -> Tuple[HeadResult, EncodeResult]:
+    """Fused head->encode: ONE device call runs the UE head AND the int8
+    quant epilogue (``codec.compress_head`` over the plan's cached jitted
+    head), producing blobs byte-identical to head_stage + encode_stage.
+
+    Falls back to the two-stage composition whenever fusion cannot apply
+    (degenerate split options, accounting-only runs, non-int8 codec modes,
+    plans without a jitted head producer).  Accounting semantics: head_s
+    stays the calibrated table time; ``quant_s`` is the measured wall time
+    of the fused device call -- it covers head+encode on this host, where
+    the unfused path's quant_s covered encode alone (the calibrated delay
+    model charges head time from head_s either way)."""
+    producer = getattr(plan, "head_jitted", lambda _o: None)(option) \
+        if execute_model and codec.supports_fused() else None
+    if producer is None:
+        head = head_stage(plan, system, img, option, execute_model)
+        enc = encode_stage(plan, system, codec, head.payload, option,
+                           execute_model, controller)
+        return head, enc
+    head_s = system.ue.compute_time_s(plan.head_flops(option))
+    t0 = time.perf_counter()
+    comp, payload = codec.compress_head(producer, plan.params, img)
+    quant_s = time.perf_counter() - t0
+    view = codec.decompress(comp)                    # server view
+    if controller is not None:
+        controller.observe_ratio(comp.compressed_bytes, comp.raw_bytes)
+    return (HeadResult(head_s=head_s, payload=payload, local_out=None),
+            EncodeResult(quant_s, comp.raw_bytes, comp.compressed_bytes,
+                         view))
+
+
 def encode_group_stage(plan: SplitPlan, system: Calibrated,
                        codec: ActivationCodec, payloads: Sequence[Any],
                        option: str, execute_model: bool,
@@ -334,6 +369,8 @@ class SplitInferencePipeline:
     narrowband: bool = False
     seed: int = 0
     execute_model: bool = True      # False = accounting-only (fast sweeps)
+    fused_head: bool = True         # one device call for head + int8 quant
+                                    # (byte-identical payloads; DESIGN.md §13)
     # telemetry plane (core/telemetry.py): a run-scoped recorder fed by
     # run_trace / run_stream.  Hooks only read finished FrameLogs, so
     # attaching one never perturbs the simulation (no rng draws).
@@ -354,10 +391,16 @@ class SplitInferencePipeline:
                                 interference_db, self.path)
             option = pred.option
 
-        head = head_stage(self.plan, self.system, img, option,
-                          self.execute_model)
-        enc = encode_stage(self.plan, self.system, self.codec, head.payload,
-                           option, self.execute_model, self.controller)
+        if self.fused_head:
+            head, enc = head_encode_stage(self.plan, self.system, self.codec,
+                                          img, option, self.execute_model,
+                                          self.controller)
+        else:
+            head = head_stage(self.plan, self.system, img, option,
+                              self.execute_model)
+            enc = encode_stage(self.plan, self.system, self.codec,
+                               head.payload, option, self.execute_model,
+                               self.controller)
         up = uplink_stage(self.system, self.path, enc.compressed_bytes,
                           interference_db, self.narrowband, rng, option)
         tail_s, _ = tail_stage(self.plan, self.system, enc.payload, option,
@@ -398,7 +441,8 @@ class SplitInferencePipeline:
             plan=self.plan, system=self.system, codec=self.codec,
             controller=self.controller, path=self.path,
             narrowband=self.narrowband, seed=self.seed, n_ues=1,
-            execute_model=self.execute_model, telemetry=self.telemetry)
+            execute_model=self.execute_model, fused_head=self.fused_head,
+            telemetry=self.telemetry)
         trace = np.asarray(interference_trace, float).reshape(-1, 1)
         return _run_stream(sim, trace, imgs=imgs, option=option, fps=fps,
                            jitter_s=jitter_s, inflight=inflight,

@@ -176,15 +176,25 @@ class SwinSplitPlan(_PlanBase):
 
     # -- execution -----------------------------------------------------------
     def head(self, img, option: str):
-        """UE-side computation.  Returns (payload_tree_or_None, detections_or_None)."""
+        """UE-side computation.  Returns (payload_tree_or_None, detections_or_None).
+
+        Runs through the model-level trace caches (``head_apply_jit`` /
+        ``forward_full_jit``), so per-frame calls stop retracing."""
         if option == UE_ONLY:
-            return None, SW.forward_full(self.cfg, self.params, img)
+            return None, SW.forward_full_jit(self.cfg)(self.params, img)
         if option == SERVER_ONLY:
             return {"img": img}, None
+        return self.head_jitted(option)(self.params, img), None
+
+    def head_jitted(self, option: str):
+        """Cached jitted head producer for ``option`` (None for the two
+        degenerate modes, which ship no boundary activations).  The fused
+        head->encode stage (core/pipeline.py) traces THIS callable into its
+        single device call, so fused and unfused paths share one trace."""
+        if option in (UE_ONLY, SERVER_ONLY):
+            return None
         l = int(option.removeprefix("split"))
-        payload = SW.head_apply(self.cfg, self.params, img, l,
-                                ship_merged=self.ship_merged)
-        return payload, None
+        return SW.head_apply_jit(self.cfg, l, self.ship_merged)
 
     def _tail_impl(self, params, payload, option: str):
         if option == SERVER_ONLY:

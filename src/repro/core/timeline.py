@@ -75,7 +75,7 @@ from repro.core.energy import interval_energy_j
 from repro.core.pipeline import (EncodeResult, FrameLog, FrameSource,
                                  HeadResult, UplinkResult, account_stage,
                                  decide_stage, encode_group_stage,
-                                 sense_stage)
+                                 head_encode_stage, sense_stage)
 from repro.core.ran import MultiCell, RanStream, UplinkRequest
 from repro.core.splitting import UE_ONLY
 
@@ -643,14 +643,26 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
         # 4. head + encode on the UE's serial compute resource: frame
         #    N+1's head starts at capture even while frame N is still in
         #    the air (streaming overlap), but queues behind N's *compute*
+        fused = sim.execute_model and getattr(sim, "fused_head", False)
         for fr in admitted:
+            if fused:
+                # one device call covers head + quant epilogue
+                # (pipeline.head_encode_stage); payload bytes match the
+                # group-encode path bit-for-bit (DESIGN.md §13)
+                fr.head, fr.enc = head_encode_stage(
+                    sim.plan, sim.system, sim.codec,
+                    src.frame(fr.idx, fr.ue), fr.option, True,
+                    controllers[fr.ue] if controllers else None)
+                continue
             payload = local = None
             if sim.execute_model:
                 payload, local = sim.plan.head(src.frame(fr.idx, fr.ue),
                                                fr.option)
             fr.head = HeadResult(head_s=sim._head_s[fr.option],
                                  payload=payload, local_out=local)
-        if sim.execute_model:
+        if fused:
+            pass                       # fr.enc already filled above
+        elif sim.execute_model:
             by_option: Dict[str, List[_Frame]] = {}
             for fr in admitted:
                 by_option.setdefault(fr.option, []).append(fr)

@@ -106,6 +106,38 @@ def decode_attention_ref(q, k, v, kv_len):
 
 # -- swin window attention ----------------------------------------------------
 
+def fused_window_attention_ref(qkv, bias, mask, *, window: int, shift: int,
+                               n_heads: int):
+    """Oracle for the one-launch fused kernel: explicit roll + partition
+    around ``window_attention_ref``.
+
+    qkv: (B, Hp, Wp, 3C) packed projection in original image coordinates;
+    bias: (nh, w2, w2); mask: (nW, w2, w2) bool or None (per-window,
+    shared across batch).  Returns (B, Hp, Wp, C).
+    """
+    B, Hp, Wp, C3 = qkv.shape
+    C = C3 // 3
+    w2 = window * window
+    nwh, nww = Hp // window, Wp // window
+    hd = C // n_heads
+    x = qkv
+    if shift:
+        x = jnp.roll(x, (-shift, -shift), axis=(1, 2))
+    x = x.reshape(B, nwh, window, nww, window, C3).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(B * nwh * nww, w2, 3, n_heads, hd)
+    q, k, v = x[:, :, 0], x[:, :, 1], x[:, :, 2]
+    amask = None
+    if mask is not None:
+        amask = jnp.broadcast_to(mask[None], (B,) + mask.shape)
+        amask = amask.reshape(-1, w2, w2)
+    o = window_attention_ref(q, k, v, bias, amask)       # (nB, w2, nh, hd)
+    o = o.reshape(B, nwh, nww, window, window, C).transpose(0, 1, 3, 2, 4, 5)
+    o = o.reshape(B, Hp, Wp, C)
+    if shift:
+        o = jnp.roll(o, (shift, shift), axis=(1, 2))
+    return o
+
+
 def window_attention_ref(q, k, v, bias, mask=None):
     """q,k,v: (nB, w2, nh, hd); bias: (nh, w2, w2); mask: (nB, w2, w2) bool."""
     nB, w2, nh, hd = q.shape

@@ -14,12 +14,15 @@ and ``head_apply`` / ``tail_apply`` execute the partitioned forward pass
 (core/splitting.py drives them).  The detection neck+head always run on the
 server side, exactly as in the paper.
 
-Window attention runs through the XLA path by default; the Pallas TPU
-kernel (kernels/window_attention.py) is selected with
-``cfg.attn_impl='pallas'`` on real hardware.
+Window attention defaults to ``cfg.attn_impl='pallas'``: the fused
+one-launch kernel (kernels/window_attention.py, DESIGN.md §13) on TPUs and
+its bitwise-identical pure-jnp mirror everywhere else, so CI exercises the
+production dispatch on every run.  ``cfg.attn_impl='xla'`` keeps the plain
+rolled/partitioned einsum path as a cross-check.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -32,8 +35,13 @@ from repro.models.layers import layer_norm, init_dense, einsum32
 
 # ---------------------------------------------------------------------------
 # relative position bias index (static, numpy)
+#
+# lru_cached on the int args: these tables are pure functions of the config
+# geometry, and uncached they were rebuilt (and re-uploaded to device) on
+# every block call of every trace.
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
 def rel_pos_index(window: int) -> np.ndarray:
     coords = np.stack(np.meshgrid(np.arange(window), np.arange(window),
                                   indexing="ij"))          # (2,w,w)
@@ -43,6 +51,7 @@ def rel_pos_index(window: int) -> np.ndarray:
     return (rel[..., 0] * (2 * window - 1) + rel[..., 1]).astype(np.int32)
 
 
+@functools.lru_cache(maxsize=None)
 def shift_attn_mask(Hp: int, Wp: int, window: int, shift: int) -> np.ndarray:
     """(nW, w2, w2) bool mask: True = may attend (same region)."""
     img = np.zeros((Hp, Wp), np.int32)
@@ -52,6 +61,19 @@ def shift_attn_mask(Hp: int, Wp: int, window: int, shift: int) -> np.ndarray:
         for ws in slices:
             img[hs, ws] = cnt
             cnt += 1
+    win = img.reshape(Hp // window, window, Wp // window, window)
+    win = win.transpose(0, 2, 1, 3).reshape(-1, window * window)
+    return (win[:, :, None] == win[:, None, :])
+
+
+@functools.lru_cache(maxsize=None)
+def pad_region_mask(Hp: int, Wp: int, H: int, W: int,
+                    window: int) -> np.ndarray:
+    """(nW, w2, w2) bool mask isolating the (H:, W:) pad strip: padded
+    tokens must not contaminate real ones (pad is its own region)."""
+    img = np.zeros((Hp, Wp), np.int32)
+    img[H:, :] = 1
+    img[:, W:] = 2
     win = img.reshape(Hp // window, window, Wp // window, window)
     win = win.transpose(0, 2, 1, 3).reshape(-1, window * window)
     return (win[:, :, None] == win[:, None, :])
@@ -149,6 +171,21 @@ def window_attention(cfg: SwinConfig, p, x, Hp: int, Wp: int, n_heads: int,
     B, _, _, C = x.shape
     w = cfg.window
     hd = C // n_heads
+    bias = p["rel_bias"][jnp.asarray(rel_pos_index(w))]      # (w2, w2, nh)
+    bias = bias.transpose(2, 0, 1)                           # (nh, w2, w2)
+
+    if cfg.attn_impl == "pallas":
+        # fused one-launch path (DESIGN.md §13): the kernel owns the roll /
+        # partition / un-partition choreography, so qkv and proj run on the
+        # image layout and nothing between them touches HBM twice
+        from repro.kernels.ops import fused_window_attention
+        qkv = einsum32("bhwc,ck->bhwk", x, p["qkv_w"],
+                       out_dtype=x.dtype) + p["qkv_b"]
+        out = fused_window_attention(qkv, bias, mask, window=w, shift=shift,
+                                     n_heads=n_heads)
+        return einsum32("bhwc,ck->bhwk", out, p["proj_w"],
+                        out_dtype=x.dtype) + p["proj_b"]
+
     if shift:
         x = jnp.roll(x, (-shift, -shift), axis=(1, 2))
     nwh, nww = Hp // w, Wp // w
@@ -159,26 +196,15 @@ def window_attention(cfg: SwinConfig, p, x, Hp: int, Wp: int, n_heads: int,
     q, k, v = jnp.split(qkv.reshape(-1, w * w, 3, n_heads, hd), 3, axis=2)
     q, k, v = (t[:, :, 0] for t in (q, k, v))                # (nB, w2, nh, hd)
 
-    bias = p["rel_bias"][jnp.asarray(rel_pos_index(w))]      # (w2, w2, nh)
-    bias = bias.transpose(2, 0, 1)                           # (nh, w2, w2)
-
-    if cfg.attn_impl == "pallas":
-        from repro.kernels.ops import window_attention as wk
-        amask = None
-        if mask is not None:
-            amask = jnp.broadcast_to(mask[None], (B, mask.shape[0]) + mask.shape[1:])
-            amask = amask.reshape(-1, *mask.shape[1:])
-        out = wk(q, k, v, bias, amask)
-    else:
-        logits = einsum32("nqhd,nkhd->nhqk", q, k) / math.sqrt(hd)
-        logits = logits + bias[None]
-        if mask is not None:
-            nW = mask.shape[0]
-            lg = logits.reshape(B, nW, n_heads, w * w, w * w)
-            lg = jnp.where(mask[None, :, None], lg, -1e9)
-            logits = lg.reshape(-1, n_heads, w * w, w * w)
-        attn = jax.nn.softmax(logits, axis=-1)
-        out = einsum32("nhqk,nkhd->nqhd", attn, v, out_dtype=x.dtype)
+    logits = einsum32("nqhd,nkhd->nhqk", q, k) / math.sqrt(hd)
+    logits = logits + bias[None]
+    if mask is not None:
+        nW = mask.shape[0]
+        lg = logits.reshape(B, nW, n_heads, w * w, w * w)
+        lg = jnp.where(mask[None, :, None], lg, -1e9)
+        logits = lg.reshape(-1, n_heads, w * w, w * w)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = einsum32("nhqk,nkhd->nqhd", attn, v, out_dtype=x.dtype)
     out = out.reshape(-1, w * w, C)
     out = einsum32("nsc,ck->nsk", out, p["proj_w"], out_dtype=x.dtype) + p["proj_b"]
 
@@ -201,14 +227,7 @@ def swin_block(cfg: SwinConfig, p, x, H: int, W: int, n_heads: int, shift: int):
     if shift:
         mask = jnp.asarray(shift_attn_mask(Hp, Wp, w, shift))
     elif (Hp, Wp) != (H, W):
-        # padded tokens must not contaminate real ones: region mask via the
-        # same machinery (treat pad as its own region)
-        img = np.zeros((Hp, Wp), np.int32)
-        img[H:, :] = 1
-        img[:, W:] = 2
-        win = img.reshape(Hp // w, w, Wp // w, w).transpose(0, 2, 1, 3)
-        win = win.reshape(-1, w * w)
-        mask = jnp.asarray(win[:, :, None] == win[:, None, :])
+        mask = jnp.asarray(pad_region_mask(Hp, Wp, H, W, w))
     h = window_attention(cfg, p, h, Hp, Wp, n_heads, shift, mask)
     h = h[:, :H, :W]
     x = x + h
@@ -325,6 +344,34 @@ def tail_apply_jit(cfg: SwinConfig, split: int):
         _TAIL_JIT[key] = jax.jit(
             lambda params, boundary: tail_apply(cfg, params, boundary, split))
     return _TAIL_JIT[key]
+
+
+# -- per-frame head entries (UE side) -----------------------------------------
+
+_HEAD_JIT: Dict[Tuple[SwinConfig, int, bool], Any] = {}
+
+
+def head_apply_jit(cfg: SwinConfig, split: int, ship_merged: bool = True):
+    """Cached jitted ``head_apply`` for one (config, split, ship_merged).
+    The UE runs this once per frame; without the cache every frame paid a
+    full retrace (SwinConfig is frozen/hashable, so the key is cheap)."""
+    key = (cfg, split, ship_merged)
+    if key not in _HEAD_JIT:
+        _HEAD_JIT[key] = jax.jit(
+            lambda params, img: head_apply(cfg, params, img, split,
+                                           ship_merged=ship_merged))
+    return _HEAD_JIT[key]
+
+
+_FULL_JIT: Dict[SwinConfig, Any] = {}
+
+
+def forward_full_jit(cfg: SwinConfig):
+    """Cached jitted whole-model forward (the UE_ONLY degenerate split)."""
+    if cfg not in _FULL_JIT:
+        _FULL_JIT[cfg] = jax.jit(
+            lambda params, img: forward_full(cfg, params, img))
+    return _FULL_JIT[cfg]
 
 
 # ---------------------------------------------------------------------------

@@ -179,6 +179,38 @@ def test_cell_execute_model_detections_match_single_ue(system, swin_exec):
         assert res.logs[i].batch_size == 3
 
 
+def test_cell_fused_head_matches_group_encode(system, swin_exec):
+    """``fused_head=True`` (one device call per UE for head + quant
+    epilogue) must produce byte-identical payload accounting and bitwise
+    identical detections vs the group-encode baseline -- in BOTH the
+    lock-step and the event engine."""
+    cfg, plan, imgs = swin_exec
+    trace = np.full((1, 3), -30.0)
+    kw = dict(plan=plan, system=system, n_ues=3, seed=0, execute_model=True,
+              batching=True, max_wait_s=30.0)
+    a = CellSimulator(**kw).run(trace, imgs=imgs, option="split1",
+                                keep_outputs=True)
+    b = CellSimulator(fused_head=True, **kw).run(trace, imgs=imgs,
+                                                 option="split1",
+                                                 keep_outputs=True)
+    for la, lb in zip(a.logs, b.logs):
+        assert la.raw_bytes == lb.raw_bytes
+        assert la.compressed_bytes == lb.compressed_bytes
+    for i in range(3):
+        for lv_a, lv_b in zip(a.outputs[0][i], b.outputs[0][i]):
+            np.testing.assert_array_equal(np.asarray(lv_a["cls"]),
+                                          np.asarray(lv_b["cls"]))
+    # event engine: same byte identity through the streaming step-4 path
+    sa = CellSimulator(**kw).run_stream(trace, fps=10.0, imgs=imgs,
+                                        option="split1")
+    sb = CellSimulator(fused_head=True, **kw).run_stream(trace, fps=10.0,
+                                                         imgs=imgs,
+                                                         option="split1")
+    for la, lb in zip(sa.logs, sb.logs):
+        assert la.raw_bytes == lb.raw_bytes
+        assert la.compressed_bytes == lb.compressed_bytes
+
+
 def test_cell_accounting_is_plan_generic(system):
     """An LM plan (options outside the Swin calibration tables) runs the
     accounting cell via spec-based payload estimation."""

@@ -233,6 +233,32 @@ def test_golden_trace_replays_field_exact(name):
                         f"the diff")
 
 
+def test_golden_replays_with_fused_head_enabled():
+    """``fused_head=True`` must be inert in accounting mode (the goldens
+    run execute_model=False): the ran_streaming trace replays field-exact
+    with the flag raised, pinning that the fused head path changes no
+    accounting numbers -- only how executed frames compute."""
+    system = _system()
+    plan = SwinSplitPlan(SWIN_FULL, params=None)
+    sim = CellSimulator(plan=plan, system=system, n_ues=3, seed=11,
+                        execute_model=False, fused_head=True,
+                        frame_budget_s=3.0,
+                        ran=RanCell(policy=make_policy("edf"),
+                                    cfg=RanConfig(tti_s=0.005)))
+    res = sim.run_stream(_trace(), option="split3", fps=0.4,
+                         jitter_s=0.05, inflight=2)
+    want = load_golden("ran_streaming")
+    got = [log_to_dict(l) for l in res.logs]
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        for k in sorted(w):
+            wv = w[k]
+            if isinstance(wv, float) and math.isnan(wv):
+                assert isinstance(g[k], float) and math.isnan(g[k])
+            else:
+                assert g[k] == wv, f"{k}: {g[k]!r} != {wv!r}"
+
+
 def test_goldens_cover_both_regimes():
     """The fixtures stay meaningful: the legacy trace exercises adaptive
     per-UE decisions on isolated links, the RAN trace exercises the MAC

@@ -163,3 +163,136 @@ def test_window_attention_no_mask():
     exp = ref.window_attention_ref(q, k, v, bias, None)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                rtol=2e-5, atol=2e-5)
+
+
+def test_window_attention_no_mask_large_window():
+    """w2 = 81 > 64 forces the pad path WITHOUT a caller mask: the eye
+    trick must kick in on the synthesized all-ones mask or the padded
+    keys poison every softmax row."""
+    ks = jax.random.split(jax.random.PRNGKey(16), 4)
+    q = jax.random.normal(ks[0], (2, 81, 2, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 81, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 81, 2, 32), jnp.float32)
+    bias = jax.random.normal(ks[3], (2, 81, 81), jnp.float32)
+    out = ops.window_attention(q, k, v, bias, None)
+    exp = ref.window_attention_ref(q, k, v, bias, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+# -- fused one-launch window attention (DESIGN.md §13) ------------------------
+
+def _fused_case(B, Hp, Wp, window, shift, nh, hd, seed=10):
+    """Random qkv/bias + the model's own region mask for the shift case."""
+    from repro.models.swin import shift_attn_mask
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    C = nh * hd
+    qkv = jax.random.normal(ks[0], (B, Hp, Wp, 3 * C), jnp.float32)
+    w2 = window * window
+    bias = jax.random.normal(ks[1], (nh, w2, w2), jnp.float32)
+    mask = (jnp.asarray(shift_attn_mask(Hp, Wp, window, shift))
+            if shift else None)
+    return qkv, bias, mask
+
+
+FUSED_CASES = [
+    # B, Hp, Wp, window, shift, nh, hd
+    (1, 14, 14, 7, 0, 3, 16),    # two bands, no shift
+    (2, 14, 14, 7, 3, 3, 16),    # shifted: carry spans two bands
+    (1, 14, 21, 7, 3, 2, 32),    # non-square, w2 = 49 -> W2P = 64
+    (1, 7, 14, 7, 3, 2, 16),     # nwh = 1: rolled band self-wraps
+    (2, 8, 12, 4, 2, 2, 16),     # small window, heavy pad 16 -> 64
+    (1, 16, 16, 8, 4, 2, 16),    # w2 = 64 exactly: no pad path
+    (1, 18, 18, 9, 4, 2, 16),    # w2 = 81 -> W2P = 128
+]
+
+
+@pytest.mark.parametrize("B,Hp,Wp,window,shift,nh,hd", FUSED_CASES)
+def test_fused_window_attention_matches_ref(B, Hp, Wp, window, shift, nh, hd):
+    qkv, bias, mask = _fused_case(B, Hp, Wp, window, shift, nh, hd)
+    out = ops.fused_window_attention(qkv, bias, mask, window=window,
+                                     shift=shift, n_heads=nh)
+    exp = ref.fused_window_attention_ref(qkv, bias, mask, window=window,
+                                         shift=shift, n_heads=nh)
+    assert out.shape == (B, Hp, Wp, nh * hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,Hp,Wp,window,shift,nh,hd", FUSED_CASES)
+def test_fused_dispatch_matches_kernel(B, Hp, Wp, window, shift, nh, hd):
+    """ops.fused_window_attention (pure-jnp mirror off-TPU) must equal the
+    Pallas kernel in interpret mode BITWISE -- the dispatch switch cannot
+    change the computed feature map."""
+    from repro.kernels import window_attention as wa
+    qkv, bias, mask = _fused_case(B, Hp, Wp, window, shift, nh, hd)
+    out = ops.fused_window_attention(qkv, bias, mask, window=window,
+                                     shift=shift, n_heads=nh)
+    nwh, nww = Hp // window, Wp // window
+    bias_p, mask_p = ops._pad_fused_inputs(bias, mask, window=window,
+                                           nwh=nwh, nww=nww)
+    kern = wa.fused_window_attention_pallas(qkv, bias_p, mask_p,
+                                            window=window, shift=shift,
+                                            n_heads=nh, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(kern))
+
+
+def test_fused_window_attention_pad_region_mask():
+    """The model's pad-strip region mask (non-multiple-of-window H/W)
+    rides the fused launch: padded tokens stay isolated."""
+    from repro.models.swin import pad_region_mask
+    H, W, window, nh, hd = 10, 12, 7, 2, 16
+    Hp, Wp = 14, 14
+    qkv, bias, _ = _fused_case(1, Hp, Wp, window, 0, nh, hd, seed=11)
+    # zero the pad strip like swin_block does (post roll it's region 1/2)
+    live = np.zeros((Hp, Wp, 1), np.float32)
+    live[:H, :W] = 1.0
+    qkv = qkv * live
+    mask = jnp.asarray(pad_region_mask(Hp, Wp, H, W, window))
+    out = ops.fused_window_attention(qkv, bias, mask, window=window,
+                                     shift=0, n_heads=nh)
+    exp = ref.fused_window_attention_ref(qkv, bias, mask, window=window,
+                                         shift=0, n_heads=nh)
+    np.testing.assert_allclose(np.asarray(out)[:, :H, :W],
+                               np.asarray(exp)[:, :H, :W],
+                               rtol=2e-5, atol=2e-5)
+
+
+# -- attention dispatch: the off-TPU jnp mirrors must be bit-identical to the
+#    Pallas kernels (interpret mode), same contract as the codec pair --------
+
+@pytest.mark.parametrize("Sq,Skv,H,KV,hd,causal,bq,bk", [
+    (128, 128, 4, 4, 64, True, 64, 64),     # MHA causal
+    (256, 256, 8, 2, 64, True, 128, 64),    # GQA
+    (96, 96, 4, 1, 32, False, 64, 64),      # MQA, ragged, non-causal
+    (1, 128, 4, 2, 64, True, 64, 64),       # single-query row (M = 1)
+])
+def test_flash_dispatch_matches_kernel(Sq, Skv, H, KV, hd, causal, bq, bk):
+    from repro.kernels import flash_attention as fa
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    q = jax.random.normal(ks[0], (2, Sq, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (2, Skv, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (2, Skv, KV, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=bq, block_kv=bk)
+    kern = fa.flash_attention_pallas(q, k, v, causal=causal, block_q=bq,
+                                     block_kv=bk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(kern))
+
+
+@pytest.mark.parametrize("S,H,KV,hd,bk,lens", [
+    (512, 8, 2, 64, 128, (170, 256, 512)),   # GQA, ragged lengths
+    (300, 4, 4, 64, 128, (0, 1, 300)),       # kv_len = 0 edge
+    (64, 4, 4, 64, 512, (10, 32, 64)),       # block_kv > S
+])
+def test_decode_dispatch_matches_kernel(S, H, KV, hd, bk, lens):
+    from repro.kernels import decode_attention as da
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    B = len(lens)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    kv_len = jnp.asarray(lens, jnp.int32)
+    out = ops.decode_attention(q, k, v, kv_len, block_kv=bk)
+    kern = da.decode_attention_pallas(q, k, v, kv_len, block_kv=bk,
+                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(kern))

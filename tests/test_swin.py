@@ -1,4 +1,6 @@
 """Swin backbone internals: masks, merging, flops accounting, payloads."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -73,12 +75,109 @@ def test_detection_loss_finite():
 
 
 def test_pallas_window_attention_path_matches_xla():
-    cfg = reduced()
-    cfg_p = SW.SwinConfig(**{**cfg.__dict__, "attn_impl": "pallas"})
-    params = SW.init(cfg, jax.random.PRNGKey(0))
-    img = jax.random.uniform(jax.random.PRNGKey(1), (1, cfg.img_h, cfg.img_w, 3))
-    out_x = SW.forward_full(cfg, params, img)
+    cfg_p = reduced()                 # pallas fused launch is the default
+    assert cfg_p.attn_impl == "pallas"
+    cfg_x = dataclasses.replace(cfg_p, attn_impl="xla")
+    params = SW.init(cfg_p, jax.random.PRNGKey(0))
+    img = jax.random.uniform(jax.random.PRNGKey(1), (1, cfg_p.img_h, cfg_p.img_w, 3))
+    out_x = SW.forward_full(cfg_x, params, img)
     out_p = SW.forward_full(cfg_p, params, img)
     for a, b in zip(out_x, out_p):
         np.testing.assert_allclose(np.asarray(a["cls"]), np.asarray(b["cls"]),
                                    rtol=2e-4, atol=2e-4)
+
+
+# -- host-side mask tables are cached (hot per-block path) --------------------
+
+def test_mask_tables_cached():
+    assert SW.rel_pos_index(7) is SW.rel_pos_index(7)
+    assert SW.shift_attn_mask(14, 14, 7, 3) is SW.shift_attn_mask(14, 14, 7, 3)
+    assert SW.pad_region_mask(14, 14, 10, 12, 7) \
+        is SW.pad_region_mask(14, 14, 10, 12, 7)
+    assert SW.shift_attn_mask(14, 14, 7, 3) is not SW.shift_attn_mask(21, 14, 7, 3)
+
+
+# -- trace caches -------------------------------------------------------------
+
+def test_head_apply_jit_cache_identity():
+    cfg = reduced()
+    assert SW.head_apply_jit(cfg, 1, True) is SW.head_apply_jit(cfg, 1, True)
+    assert SW.head_apply_jit(cfg, 1, True) is not SW.head_apply_jit(cfg, 1, False)
+    assert SW.head_apply_jit(cfg, 1, True) is not SW.head_apply_jit(cfg, 2, True)
+    assert SW.tail_apply_jit(cfg, 1) is SW.tail_apply_jit(cfg, 1)
+    assert SW.forward_full_jit(cfg) is SW.forward_full_jit(cfg)
+
+
+# -- fused head->encode byte-identity (DESIGN.md §13) -------------------------
+
+@pytest.fixture(scope="module")
+def swin_fused():
+    from repro.core.splitting import SwinSplitPlan
+    cfg = reduced()
+    params = SW.init(cfg, jax.random.PRNGKey(0))
+    img = jax.random.uniform(jax.random.PRNGKey(2),
+                             (1, cfg.img_h, cfg.img_w, 3))
+    return cfg, params, img
+
+
+def _assert_payloads_byte_identical(a, b):
+    assert a.blobs == b.blobs
+    assert len(a.scales) == len(b.scales)
+    for sa, sb in zip(a.scales, b.scales):
+        np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+    assert a.meta == b.meta
+    assert a.raw_bytes == b.raw_bytes
+    assert a.mode == b.mode and a.fused == b.fused
+
+
+@pytest.mark.parametrize("split", [0, 1, 2, 3, 4])
+@pytest.mark.parametrize("ship_merged", [True, False])
+def test_fused_head_encode_byte_identity(swin_fused, split, ship_merged):
+    """compress_head (head + quant epilogue in ONE device call) must emit
+    the SAME bytes as compress() of the same jitted producer's output --
+    for every split boundary and both payload layouts."""
+    from repro.core.compression import ActivationCodec
+    from repro.core.splitting import SwinSplitPlan, split_option
+    cfg, params, img = swin_fused
+    plan = SwinSplitPlan(cfg, params, ship_merged=ship_merged,
+                         include_early_split=True)
+    codec = ActivationCodec()
+    assert codec.supports_fused()
+    producer = plan.head_jitted(split_option(split))
+    comp_f, tree_f = codec.compress_head(producer, params, img)
+    tree_u = producer(params, img)
+    comp_u = codec.compress(tree_u)
+    assert comp_f.fused and comp_u.fused
+    _assert_payloads_byte_identical(comp_f, comp_u)
+    # the producer tree returned alongside is the same computation bitwise
+    for lf, lu in zip(jax.tree.leaves(tree_f), jax.tree.leaves(tree_u)):
+        np.testing.assert_array_equal(np.asarray(lf), np.asarray(lu))
+    # and the tail sees identical activations end to end
+    out_f = plan.tail(codec.decompress(comp_f), split_option(split))
+    out_u = plan.tail(codec.decompress(comp_u), split_option(split))
+    for a, b in zip(out_f, out_u):
+        np.testing.assert_array_equal(np.asarray(a["cls"]),
+                                      np.asarray(b["cls"]))
+
+
+@pytest.mark.parametrize("mode", ["int8", "int8_zlib", "int8_delta_zlib"])
+def test_fused_head_encode_byte_identity_modes(swin_fused, mode):
+    from repro.core.compression import ActivationCodec
+    from repro.core.splitting import SwinSplitPlan
+    cfg, params, img = swin_fused
+    plan = SwinSplitPlan(cfg, params)
+    codec = ActivationCodec(mode=mode)
+    producer = plan.head_jitted("split1")
+    comp_f, _ = codec.compress_head(producer, params, img)
+    comp_u = codec.compress(producer(params, img))
+    _assert_payloads_byte_identical(comp_f, comp_u)
+
+
+def test_compress_head_falls_back_without_fused_mode(swin_fused):
+    """Non-int8 codec modes can't fuse the epilogue; compress_head must
+    refuse at supports_fused() so callers take the two-stage path."""
+    from repro.core.compression import ActivationCodec
+    codec = ActivationCodec(mode="zlib")
+    assert not codec.supports_fused()
+    codec2 = ActivationCodec(fused=False)
+    assert not codec2.supports_fused()
