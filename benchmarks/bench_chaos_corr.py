@@ -1,0 +1,197 @@
+"""Correlated multi-cell chaos: simultaneous site faults vs staggered
+faults of equal marginal rate, plus the batched park/adopt scale anchor.
+
+Two claims are measured, both on the two-cell A3 mobility topology:
+
+  * **Correlation is strictly worse than rate.**  One weather front
+    (3 s link blackout per cell) is injected twice with identical seeds:
+    once with ``front_offset_s = 0`` (both cells fault in the SAME
+    window -- correlated) and once with a 10 s offset (same per-cell
+    outage duration, windows disjoint -- the independent baseline of
+    equal marginal rate).  Under the staggered front A3 evacuates the
+    dying cell into its healthy neighbor, so frames keep completing;
+    under the correlated front both RSRP maps sink together, A3 sees no
+    better neighbor, and the fleet is trapped.  Correlated availability
+    must be strictly worse overall and no better in any cell.
+
+  * **Batched park/adopt holds at scale.**  A vectorized chaos drain
+    (mass blackouts parking/adopting thousands of flows through the
+    mask-based ``migrate_ues`` / ``adopt_batch`` path) must cost no more
+    than 1.5x the chaos-free drain of the same flow set -- the chaos
+    plane is an array epilogue, not a per-UE python loop.
+
+The correlated scenario is also run through BOTH engines and asserted
+field-exact, so the CI fast sweep exercises a vectorized-engine chaos
+run end to end.
+
+Acceptance anchors (asserted, persisted to results/bench_chaos_corr.json):
+  * chaos-free availability is 1.0 at this operating point,
+  * correlated overall availability < staggered, same seeds,
+  * per-cell: correlated <= staggered everywhere, strictly worse
+    somewhere,
+  * the staggered front triggers more A3 evacuations than the
+    correlated one,
+  * vectorized engine matches python field-exact on the correlated run,
+  * vectorized chaos drain wall <= 1.5x chaos-free drain.
+
+    PYTHONPATH=src python -m benchmarks.bench_chaos_corr
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line, save
+from repro.configs.swin_t_detection import CONFIG
+from repro.core.calibration import calibrate
+from repro.core.cell import CellSimulator
+from repro.core.chaos import ChaosConfig, ChaosModel, CorrelationSpec
+from repro.core.engine_vec import chaos_drain, synthetic_flows
+from repro.core.mobility import (MobilityConfig, MobilityModel,
+                                 StaticTrajectory, two_cell_sites)
+from repro.core.ran import MultiCell, RanCell, RanConfig, RanStream, \
+    make_policy
+from repro.core.ran_vec import VecRanStream
+from repro.core.splitting import SwinSplitPlan
+
+FRONT_S = (4.0, 3.0)      # the front reaches each cell at t0=4s for 3s
+STAGGER_S = 10.0          # offset large enough that windows are disjoint
+
+
+def _front(offset_s: float) -> ChaosModel:
+    return ChaosModel(ChaosConfig(correlation=CorrelationSpec(
+        weather_front=(FRONT_S,), front_offset_s=offset_s)))
+
+
+def _sim(system, plan, chaos, *, engine, n_ues, seed, budget_s):
+    sites = two_cell_sites(400.0)
+    traj = [StaticTrajectory(150.0, 0.0) if u % 2 == 0
+            else StaticTrajectory(250.0, 0.0) for u in range(n_ues)]
+    mob = MobilityModel(sites, traj,
+                        MobilityConfig(a3_ttt_s=0.4, relocation_gap_s=0.05))
+    return CellSimulator(
+        plan=plan, system=system, n_ues=n_ues, seed=seed,
+        execute_model=False, frame_budget_s=budget_s,
+        ran=MultiCell([RanCell(policy=make_policy("edf"),
+                               cfg=RanConfig(tti_s=0.005))
+                       for _ in sites]),
+        engine=engine, mobility=mob, chaos=chaos)
+
+
+def _drain_wall(n_flows, n_ues, blackouts, seed):
+    stream = VecRanStream(RanCell(policy=make_policy("edf"), cfg=RanConfig()),
+                          n_ues=n_ues)
+    flows = synthetic_flows(n_flows, seed=seed, n_ues=n_ues)
+    rng = np.random.default_rng(np.random.SeedSequence(seed + 1))
+    t0 = time.perf_counter()
+    done = chaos_drain(stream, flows, rng, blackouts=blackouts,
+                       batch_enqueue=True)
+    wall = time.perf_counter() - t0
+    assert len(done) == n_flows
+    return wall
+
+
+def run(fast: bool = False, level: float = -40.0, n_ues: int = 4,
+        budget_s: float = 4.0, seed: int = 7):
+    system = calibrate()
+    plan = SwinSplitPlan(CONFIG, params=None)
+    option, fps, n_frames, inflight = "server_only", 1.0, 20, 2
+    trace = np.full((n_frames, n_ues), float(level))
+
+    table = {"config": {"option": option, "level_db": level, "n_ues": n_ues,
+                        "budget_s": budget_s, "n_frames": n_frames,
+                        "fps": fps, "inflight": inflight, "fast": fast,
+                        "front": FRONT_S, "stagger_s": STAGGER_S}}
+
+    def go(chaos, engine="python"):
+        return _sim(system, plan, chaos, engine=engine, n_ues=n_ues,
+                    seed=seed, budget_s=budget_s).run_stream(
+            trace, option=option, fps=fps, jitter_s=0.05, inflight=inflight)
+
+    # -- correlated vs staggered front, identical seeds ----------------------
+    base = go(None)
+    corr = go(_front(0.0))
+    stag = go(_front(STAGGER_S))
+    cells = sorted(corr.stats.cell_stats) or [0, 1]
+    rows = {}
+    for name, res in (("chaos_free", base), ("correlated", corr),
+                      ("staggered", stag)):
+        st = res.stats
+        rows[name] = {
+            "availability": st.availability,
+            "cell_availability": {c: st.cell_availability(c) for c in cells},
+            "n_handovers": st.n_handovers,
+            "n_outages": st.n_outages,
+            "cell_stats": {c: dict(v) for c, v in st.cell_stats.items()},
+        }
+        table[name] = rows[name]
+        print(f"  {name:>11s} | avail {st.availability:.3f} "
+              f"per-cell {[round(st.cell_availability(c), 3) for c in cells]}"
+              f" handovers {st.n_handovers}")
+
+    # -- vectorized engine replays the correlated scenario field-exact -------
+    corr_vec = go(_front(0.0), engine="vectorized")
+    paired = (len(corr.logs) == len(corr_vec.logs)
+              and all(a == b for a, b in zip(corr.logs, corr_vec.logs))
+              and corr.stats.cell_stats == corr_vec.stats.cell_stats)
+
+    # -- batched park/adopt at scale: chaos drain vs chaos-free drain --------
+    n_flows = 1_000 if fast else 10_000
+    d_ues = 100 if fast else 500
+    blk = [(0.03, 0.12, list(range(0, d_ues, 3))),
+           (0.08, 0.20, list(range(1, d_ues, 7)))]
+    _drain_wall(min(n_flows, 1_000), d_ues, [], seed)        # warmup
+    _drain_wall(min(n_flows, 1_000), d_ues, blk, seed)
+    wall_free = _drain_wall(n_flows, d_ues, [], seed)
+    wall_chaos = _drain_wall(n_flows, d_ues, blk, seed)
+    ratio = wall_chaos / wall_free
+    table["scale"] = {"n_flows": n_flows, "n_ues": d_ues,
+                      "n_blackouts": len(blk),
+                      "wall_free_s": wall_free, "wall_chaos_s": wall_chaos,
+                      "ratio": ratio}
+    print(f"  drain {n_flows} flows | free {wall_free:.2f}s "
+          f"chaos {wall_chaos:.2f}s ratio {ratio:.3f}")
+
+    # -- acceptance anchors --------------------------------------------------
+    av = {k: rows[k]["availability"] for k in rows}
+    pc_corr = rows["correlated"]["cell_availability"]
+    pc_stag = rows["staggered"]["cell_availability"]
+    base_ok = av["chaos_free"] == 1.0
+    overall_ok = av["correlated"] < av["staggered"]
+    cells_ok = all(pc_corr[c] <= pc_stag[c] for c in cells)
+    strict_ok = any(pc_corr[c] < pc_stag[c] for c in cells)
+    evac_ok = (rows["staggered"]["n_handovers"]
+               > rows["correlated"]["n_handovers"])
+    ratio_ok = ratio <= 1.5
+    table["acceptance"] = {
+        "chaos_free_availability_is_one": base_ok,
+        "correlated_strictly_worse_overall": overall_ok,
+        "correlated_no_better_in_any_cell": cells_ok,
+        "correlated_strictly_worse_in_some_cell": strict_ok,
+        "staggered_front_evacuates_more": evac_ok,
+        "vectorized_matches_python_field_exact": bool(paired),
+        "chaos_drain_within_1p5x_of_free": ratio_ok,
+    }
+    assert base_ok, f"chaos-free anchor must be clean: {av['chaos_free']}"
+    assert overall_ok, ("correlated site faults must be strictly worse than "
+                        f"independent faults of equal marginal rate: {av}")
+    assert cells_ok and strict_ok, (
+        f"per-cell availability corr {pc_corr} vs stag {pc_stag}")
+    assert evac_ok, ("A3 must evacuate more under the staggered front: "
+                     f"{rows['staggered']['n_handovers']} vs "
+                     f"{rows['correlated']['n_handovers']}")
+    assert paired, "vectorized engine must replay correlated chaos exactly"
+    assert ratio_ok, (f"batched park/adopt too slow: chaos {wall_chaos:.2f}s"
+                      f" > 1.5x free {wall_free:.2f}s")
+
+    save("bench_chaos_corr_fast" if fast else "bench_chaos_corr", table)
+    return csv_line(
+        "chaos_correlated", 0,
+        f"avail_corr={av['correlated']:.3f}<stag={av['staggered']:.3f};"
+        f"evac={rows['staggered']['n_handovers']}>"
+        f"{rows['correlated']['n_handovers']};drain_ratio={ratio:.2f}")
+
+
+if __name__ == "__main__":
+    print(run())

@@ -26,6 +26,8 @@ from typing import Dict, List, Tuple
 # by the CI smoke share their full run's schema.
 REQUIRED: Dict[str, Tuple[str, ...]] = {
     "bench_chaos": ("config", "acceptance"),
+    "bench_chaos_corr": ("config", "scale", "acceptance"),
+    "bench_chaos_corr_fast": ("config", "scale", "acceptance"),
     "bench_chaos_fast": ("config", "acceptance"),
     "bench_head_fused": ("config", "rows", "acceptance"),
     "bench_head_fused_fast": ("config", "rows", "acceptance"),

@@ -25,11 +25,11 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (bench_adaptive, bench_cell, bench_chaos,
-                            bench_compression, bench_dupf, bench_e2e_delay,
-                            bench_energy_breakdown, bench_energy_privacy,
-                            bench_estimator, bench_kernel_cost,
-                            bench_mobility, bench_ran, bench_scale,
-                            bench_streaming, bench_tx_energy)
+                            bench_chaos_corr, bench_compression, bench_dupf,
+                            bench_e2e_delay, bench_energy_breakdown,
+                            bench_energy_privacy, bench_estimator,
+                            bench_kernel_cost, bench_mobility, bench_ran,
+                            bench_scale, bench_streaming, bench_tx_energy)
 
     benches = [
         # fast mode: reduced model, same legacy-vs-fused comparison + the
@@ -64,6 +64,13 @@ def main() -> int:
         # no-failover); writes bench_chaos_fast.json so the CI smoke
         # never clobbers the committed full-run curves
         ("chaos_recovery", lambda: bench_chaos.run(fast=True)),
+        # fast mode: 1k-flow drain instead of 10k, same acceptance
+        # anchors (correlated site faults strictly worse than staggered
+        # faults of equal marginal rate, vectorized engine field-exact
+        # on the correlated run -- the CI vectorized-chaos smoke --
+        # batched park/adopt drain <= 1.5x chaos-free); writes
+        # bench_chaos_corr_fast.json, never the committed full curves
+        ("chaos_correlated", lambda: bench_chaos_corr.run(fast=True)),
         # compiles the reduced Swin forward and pushes it through the
         # loop-aware HLO analyzer (launch/hlo_cost.py) + roofline table
         # (benchmarks/roofline.py) -- the dry-run-free path, so the CI

@@ -206,6 +206,10 @@ class CellStats:
     n_lost_edge: int = 0          # frames lost to an edge outage (drop policy)
     n_lost_path: int = 0          # frames lost in flight on a down user plane
     n_outages: int = 0            # injected outage/blackout windows this run
+    # per-cell chaos/SLO breakdown keyed by serving cell at frame
+    # completion/loss (multi-cell timeline runs; empty otherwise).  Keys
+    # per cell: n_completed / n_dropped / n_lost_edge / n_lost_path.
+    cell_stats: Dict[int, Dict[str, int]] = field(default_factory=dict)
 
     def absorb_slot(self, records: List[BatchRecord],
                     served: Dict[int, ServedTail]):
@@ -272,6 +276,15 @@ class CellStats:
         total = (self.n_completed + self.n_dropped
                  + self.n_lost_edge + self.n_lost_path)
         return self.n_completed / total if total else 1.0
+
+    def cell_availability(self, cell: int) -> float:
+        """Per-cell availability from the ``cell_stats`` breakdown --
+        the same served/admitted ratio scoped to one ``CellSite`` (1.0
+        for a cell with nothing attributed to it)."""
+        cs = self.cell_stats.get(cell, {})
+        total = (cs.get("n_completed", 0) + cs.get("n_dropped", 0)
+                 + cs.get("n_lost_edge", 0) + cs.get("n_lost_path", 0))
+        return cs.get("n_completed", 0) / total if total else 1.0
 
 
 @dataclass

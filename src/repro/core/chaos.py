@@ -61,6 +61,7 @@ split option is re-selected).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -88,6 +89,48 @@ def _merge(windows: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
     return out
 
 
+def _merge_censored(windows: List[Tuple[float, float]],
+                    censored: List[bool]
+                    ) -> Tuple[List[Tuple[float, float]], List[bool]]:
+    """``_merge`` carrying per-window censor flags: a merged window is
+    censored iff any constituent was."""
+    out: List[Tuple[float, float]] = []
+    flags: List[bool] = []
+    for (a, b), c in sorted(zip(windows, censored)):
+        if out and a <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], b))
+            flags[-1] = flags[-1] or c
+        else:
+            out.append((a, b))
+            flags.append(bool(c))
+    return out, flags
+
+
+def _pad_flags(flags: Sequence[bool], n: int) -> List[bool]:
+    """Censor flags padded with False to window-list length (schedules
+    poked in by hand -- tests, demos -- carry no flags)."""
+    return list(flags) + [False] * (n - len(flags))
+
+
+def _clamp_horizon(windows: List[Tuple[float, float]], horizon_s: float
+                   ) -> Tuple[List[Tuple[float, float]], List[bool]]:
+    """Clip merged windows to the simulated horizon.  A window whose
+    true end lies past the horizon is CENSORED: the run ended while the
+    fault was still active, so no recovery instant exists inside
+    simulated time.  (Previously such windows kept their raw end, and
+    ``RecoveryMetrics.time_to_recover`` / availability described time
+    that was never simulated.)  Windows opening at or after the horizon
+    never happen and are dropped."""
+    wins: List[Tuple[float, float]] = []
+    cens: List[bool] = []
+    for a, b in windows:
+        if a >= horizon_s:
+            continue
+        wins.append((a, min(b, horizon_s)))
+        cens.append(b > horizon_s)
+    return wins, cens
+
+
 def _inside(windows: Sequence[Tuple[float, float]], t: float) -> bool:
     return any(a <= t < b for a, b in windows)
 
@@ -111,6 +154,12 @@ class OutageSpec:
 
     def windows(self, rng: np.random.Generator,
                 horizon_s: float) -> List[Tuple[float, float]]:
+        return self.windows_censored(rng, horizon_s)[0]
+
+    def windows_censored(self, rng: np.random.Generator, horizon_s: float
+                         ) -> Tuple[List[Tuple[float, float]], List[bool]]:
+        """Windows clipped to the horizon plus a per-window censor flag
+        (True = the fault outlived the run; see ``_clamp_horizon``)."""
         gaps = rng.standard_exponential(self.max_events)
         durs = rng.standard_exponential(self.max_events)
         out = [(float(a), float(a) + float(d)) for a, d in self.schedule]
@@ -123,7 +172,7 @@ class OutageSpec:
                 dur = float(d) * self.mean_duration_s
                 out.append((t, t + dur))
                 t += dur
-        return _merge(out)
+        return _clamp_horizon(_merge(out), horizon_s)
 
 
 @dataclass(frozen=True)
@@ -157,6 +206,57 @@ class ChurnSpec:
                 x += boost
         return max(x, 1e-6)
 
+    def _hazard(self, a: float, b: float) -> float:
+        """``integral_a^b intensity(s) ds`` in closed form: the constant
+        base integrates linearly, the diurnal sinusoid through its exact
+        antiderivative, each flash crowd over its clipped overlap."""
+        x = b - a
+        if self.diurnal_period_s > 0.0:
+            w = 2.0 * math.pi / self.diurnal_period_s
+            x += self.diurnal_depth / w * (math.cos(w * a) - math.cos(w * b))
+        for t0, dur, boost in self.flash_crowds:
+            lo, hi = max(a, t0), min(b, t0 + dur)
+            if hi > lo:
+                x += boost * (hi - lo)
+        return x
+
+    def _off_end(self, t: float, target: float) -> float:
+        """Inverse-integrated-hazard time change for one off-sojourn:
+        the first ``T > t`` with ``integral_t^T intensity(s) ds ==
+        target``, consuming no draws.  The off-hazard now integrates
+        the intensity over the WHOLE sojourn, so a flash crowd (or
+        diurnal peak) opening mid-sojourn compresses the remaining
+        absence -- previously ``intensity`` was evaluated only at the
+        sojourn start, so a crowd starting later never pulled the UE
+        back (the ``intervals`` bugfix).  Piecewise-constant intensity
+        (no diurnal term) inverts in closed form segment by segment
+        over the flash-crowd breakpoints; with a diurnal sinusoid the
+        cumulative hazard is still strictly increasing (intensity > 0),
+        so it is inverted by bisection on the exact antiderivative."""
+        if self.diurnal_period_s <= 0.0:
+            if not self.flash_crowds:
+                return t + target / self.intensity(t)
+            a = t
+            for b in sorted({e for t0, dur, _x in self.flash_crowds
+                             for e in (t0, t0 + dur) if e > t}):
+                seg = self._hazard(a, b)
+                if target <= seg:
+                    return a + target / self.intensity(a)
+                target -= seg
+                a = b
+            return a + target / self.intensity(a)   # constant tail
+        lo_int = max(1.0 - abs(self.diurnal_depth), 1e-6)
+        lo, hi = t, t + target / lo_int
+        for _ in range(200):
+            if hi - lo <= 1e-12 * max(abs(hi), 1.0):
+                break
+            mid = 0.5 * (lo + hi)
+            if self._hazard(t, mid) < target:
+                lo = mid
+            else:
+                hi = mid
+        return hi
+
     def intervals(self, rng: np.random.Generator, horizon_s: float,
                   n_ues: int) -> List[List[Tuple[float, float]]]:
         """Per-UE presence intervals over [0, horizon]."""
@@ -177,8 +277,9 @@ class ChurnSpec:
                 else:
                     if self.mean_off_s <= 0.0:
                         break                      # absent forever
-                    t += (float(soj[u, j]) * self.mean_off_s
-                          / self.intensity(t))
+                    # SAME single exponential draw, time-changed through
+                    # the inverse integrated hazard (fixed draw budget)
+                    t = self._off_end(t, float(soj[u, j]) * self.mean_off_s)
                     start, on = t, True
                 if t >= horizon_s:
                     break
@@ -186,6 +287,47 @@ class ChurnSpec:
                 iv.append((start, math.inf))
             out.append(iv)
         return out
+
+
+@dataclass(frozen=True)
+class CorrelationSpec:
+    """Correlated failure models: no real site outage is an independent
+    window.  Three couplings, all layered on the independent specs:
+
+      * **Site power** (``site_power`` schedule and/or the stochastic
+        ``site_power_rate_hz``/``site_power_mean_s`` process): one
+        window takes the edge server AND the primary dUPF down
+        together -- the windows merge into BOTH components' schedules,
+        so failover has nowhere useful to go while the edge is dark.
+      * **Weather front** (``weather_front`` = ``(start_s,
+        duration_s)`` windows): a link blackout sweeping the cell grid;
+        cell ``c`` goes dark at ``start + c * front_offset_s`` for the
+        front's duration.  A faulted site's RSRP proxy drops by
+        ``fault_penalty_db`` (core/mobility.py), so A3 evacuates its
+        UEs to healthy neighbors -- unless the front is simultaneous
+        and there is no healthy neighbor to flee to.
+      * **Outage-triggered churn surge** (``surge_boost`` /
+        ``surge_duration_s``): a flash-crowd re-entry boost pinned to
+        every edge/upf recovery instant -- the crowd that reconnects
+        the moment service returns.
+
+    Draw discipline: the site-power process consumes exactly
+    ``max_site_events`` gap/duration pairs from the model's dedicated
+    5th grandchild rng EVERY run, whatever the rate; weather fronts and
+    churn surges are deterministic functions of already-drawn state (no
+    draws).  ``SeedSequence`` sub-spawns are index-stable, so growing
+    the spawn from 4 to 5 grandchildren never moved the four
+    independent-feature streams -- a zero-correlation config replays
+    every engine field-exact (tests/test_chaos.py)."""
+    site_power: Tuple[Tuple[float, float], ...] = ()
+    site_power_rate_hz: float = 0.0
+    site_power_mean_s: float = 0.0
+    max_site_events: int = 4
+    weather_front: Tuple[Tuple[float, float], ...] = ()
+    front_offset_s: float = 0.0
+    surge_boost: float = 0.0
+    surge_duration_s: float = 0.0
+    fault_penalty_db: float = 60.0
 
 
 @dataclass
@@ -204,6 +346,7 @@ class ChaosConfig:
     blackout: Optional[OutageSpec] = None
     blackout_ues: Optional[Sequence[int]] = None   # None = every UE
     churn: Optional[ChurnSpec] = None
+    correlation: Optional[CorrelationSpec] = None
     edge_policy: str = "requeue"
     edge_warmup_s: float = 0.0
     failover: bool = True
@@ -234,6 +377,11 @@ class RecoveryMetrics:
     reconverge_frames: Optional[float] = None  # mean decided frames after
                                                # end until the pre-outage
                                                # option is re-selected
+    censored: bool = False              # the run ended inside the window:
+                                        # no recovery instant exists in
+                                        # simulated time (not a recovery)
+    cell: Optional[int] = None          # cell-targeted (weather front)
+                                        # windows carry the cell index
 
 
 class ChaosModel:
@@ -252,12 +400,23 @@ class ChaosModel:
     def reset(self, n_ues: int, seq: np.random.SeedSequence):
         self.n_ues = n_ues
         # one grandchild per feature: enabling/tuning one feature never
-        # moves another's schedule (index-stable sub-spawn)
-        kids = seq.spawn(4)
+        # moves another's schedule (index-stable sub-spawn; the 5th
+        # child is the CorrelationSpec's -- growing the spawn count
+        # never moves the first four streams)
+        kids = seq.spawn(5)
         self._rngs = [np.random.default_rng(k) for k in kids]
         self.edge_windows: List[Tuple[float, float]] = []
         self.upf_windows: List[Tuple[float, float]] = []
         self.blackout_windows: List[Tuple[float, float]] = []
+        self.site_windows: List[Tuple[float, float]] = []
+        self.edge_censored: List[bool] = []
+        self.upf_censored: List[bool] = []
+        self.blackout_censored: List[bool] = []
+        # weather-front blackouts targeted at one cell's serving UEs:
+        # (cell, start, end) plus the matching censor flags
+        self.cell_blackout_windows: List[Tuple[int, float, float]] = []
+        self.cell_censored: List[bool] = []
+        self.effective_churn: Optional[ChurnSpec] = self.cfg.churn
         self._churn_iv: Optional[List[List[Tuple[float, float]]]] = None
         self.routed_failover = False
         self.monitor = HeartbeatMonitor(
@@ -268,22 +427,69 @@ class ChaosModel:
         self._down = {EDGE_WORKER: False, UPF_WORKER: False}
 
     # -- schedule -------------------------------------------------------------
-    def begin(self, horizon_s: float) -> List[Tuple[float, str, Any]]:
+    def begin(self, horizon_s: float,
+              n_cells: int = 1) -> List[Tuple[float, str, Any]]:
         """Draw the run's schedules and return the chaos events for the
         event loop, sorted by time: ``(t, kind, payload)`` with kinds
-        ``heartbeat`` / ``blackout_start`` / ``blackout_end``."""
+        ``heartbeat`` / ``blackout_start`` / ``blackout_end`` /
+        ``cell_blackout_start`` / ``cell_blackout_end``.  ``n_cells``
+        sizes the weather-front sweep (the mobility site count)."""
         cfg = self.cfg
+        corr = cfg.correlation
         if cfg.edge_outage is not None:
-            self.edge_windows = cfg.edge_outage.windows(
-                self._rngs[0], horizon_s)
+            self.edge_windows, self.edge_censored = \
+                cfg.edge_outage.windows_censored(self._rngs[0], horizon_s)
         if cfg.upf_outage is not None:
-            self.upf_windows = cfg.upf_outage.windows(
-                self._rngs[1], horizon_s)
+            self.upf_windows, self.upf_censored = \
+                cfg.upf_outage.windows_censored(self._rngs[1], horizon_s)
         if cfg.blackout is not None:
-            self.blackout_windows = cfg.blackout.windows(
-                self._rngs[2], horizon_s)
-        if cfg.churn is not None:
-            self._churn_iv = cfg.churn.intervals(
+            self.blackout_windows, self.blackout_censored = \
+                cfg.blackout.windows_censored(self._rngs[2], horizon_s)
+        if corr is not None:
+            # site power: one window takes edge + dUPF down TOGETHER --
+            # drawn from the dedicated 5th grandchild with OutageSpec's
+            # fixed budget, then merged into both component schedules
+            spec = OutageSpec(schedule=corr.site_power,
+                              rate_hz=corr.site_power_rate_hz,
+                              mean_duration_s=corr.site_power_mean_s,
+                              max_events=corr.max_site_events)
+            self.site_windows, site_cens = spec.windows_censored(
+                self._rngs[4], horizon_s)
+            if self.site_windows:
+                self.edge_windows, self.edge_censored = _merge_censored(
+                    self.edge_windows + self.site_windows,
+                    _pad_flags(self.edge_censored, len(self.edge_windows))
+                    + site_cens)
+                self.upf_windows, self.upf_censored = _merge_censored(
+                    self.upf_windows + self.site_windows,
+                    _pad_flags(self.upf_censored, len(self.upf_windows))
+                    + site_cens)
+            # weather front: cell c's blackout rides the front with the
+            # per-cell propagation offset (deterministic, no draws)
+            cwins: List[Tuple[float, int, float, bool]] = []
+            for f0, fdur in corr.weather_front:
+                for c in range(n_cells):
+                    a = float(f0) + c * corr.front_offset_s
+                    if a >= horizon_s:
+                        continue
+                    cwins.append((a, c, min(a + float(fdur), horizon_s),
+                                  a + float(fdur) > horizon_s))
+            cwins.sort()
+            self.cell_blackout_windows = [(c, a, b) for a, c, b, _x in cwins]
+            self.cell_censored = [x for _a, _c, _b, x in cwins]
+            # outage-triggered churn surge: flash-crowd re-entry pinned
+            # to every recovery instant (deterministic, no draws; the
+            # churn stream's draw count is untouched)
+            if (corr.surge_boost > 0.0 and corr.surge_duration_s > 0.0
+                    and cfg.churn is not None):
+                ends = sorted({b for _a, b in
+                               self.edge_windows + self.upf_windows})
+                self.effective_churn = dataclasses.replace(
+                    cfg.churn, flash_crowds=cfg.churn.flash_crowds + tuple(
+                        (b, corr.surge_duration_s, corr.surge_boost)
+                        for b in ends))
+        if self.effective_churn is not None:
+            self._churn_iv = self.effective_churn.intervals(
                 self._rngs[3], horizon_s, self.n_ues)
 
         ev: List[Tuple[float, str, Any]] = []
@@ -292,7 +498,11 @@ class ChaosModel:
         for b0, b1 in self.blackout_windows:
             ev.append((b0, "blackout_start", (ues, b1)))
             ev.append((b1, "blackout_end", ues))
-        if cfg.edge_outage is not None or cfg.upf_outage is not None:
+        for w, (c, b0, b1) in enumerate(self.cell_blackout_windows):
+            ev.append((b0, "cell_blackout_start", (w, c, b1)))
+            ev.append((b1, "cell_blackout_end", (w, c)))
+        if (cfg.edge_outage is not None or cfg.upf_outage is not None
+                or self.edge_windows or self.upf_windows):
             # the detector must keep ticking past the last outage end (+
             # timeout) or recovery would never be *detected*
             last = max([horizon_s]
@@ -372,6 +582,11 @@ class ChaosModel:
             for t0, t1 in windows:
                 ev.append((f"outage:{comp}", t0,
                            {"t1": t1, "component": comp}))
+        for t0, t1 in self.site_windows:
+            ev.append(("outage:site", t0, {"t1": t1, "component": "site"}))
+        for c, t0, t1 in self.cell_blackout_windows:
+            ev.append(("outage:cell", t0,
+                       {"t1": t1, "component": "link", "cell": c}))
         failover_from: Optional[float] = None
         for tr in self.transitions:
             kind = "detect" if tr["event"] == "down" else "recover"
@@ -406,11 +621,26 @@ class ChaosModel:
         as ``(ue, frame_idx, capture_s)``."""
         reason = {"edge": "edge_outage", "upf": "upf_outage"}
         out: List[RecoveryMetrics] = []
-        for comp, windows in (("edge", self.edge_windows),
-                              ("upf", self.upf_windows),
-                              ("link", self.blackout_windows)):
-            for t0, t1 in windows:
-                m = RecoveryMetrics(component=comp, start_s=t0, end_s=t1)
+        groups: List[Tuple[str, List[Tuple[float, float]], List[bool],
+                           Optional[List[int]]]] = [
+            ("edge", self.edge_windows,
+             _pad_flags(self.edge_censored, len(self.edge_windows)), None),
+            ("upf", self.upf_windows,
+             _pad_flags(self.upf_censored, len(self.upf_windows)), None),
+            ("link", self.blackout_windows,
+             _pad_flags(self.blackout_censored,
+                        len(self.blackout_windows)), None),
+            ("link", [(a, b) for _c, a, b in self.cell_blackout_windows],
+             _pad_flags(self.cell_censored,
+                        len(self.cell_blackout_windows)),
+             [c for c, _a, _b in self.cell_blackout_windows]),
+        ]
+        for comp, windows, cens, cells in groups:
+            for w, (t0, t1) in enumerate(windows):
+                m = RecoveryMetrics(component=comp, start_s=t0, end_s=t1,
+                                    censored=cens[w],
+                                    cell=None if cells is None
+                                    else cells[w])
                 slack = (self.cfg.heartbeat_timeout_s
                          + 2.0 * self.cfg.heartbeat_period_s)
                 for tr in self.transitions:
@@ -423,10 +653,14 @@ class ChaosModel:
                     if tr["event"] == "up" and math.isnan(m.clear_s) \
                             and tr["t"] >= t1:
                         m.clear_s = tr["t"]
-                done = [fr for fr in frames if not fr.drop_reason]
-                after = [fr.done_s for fr in done if fr.done_s >= t1]
-                if after:
-                    m.time_to_recover_s = min(after) - t0
+                # a censored window never recovered inside simulated
+                # time: time_to_recover stays NaN instead of faking a
+                # recovery off the post-horizon drain
+                if not m.censored:
+                    done = [fr for fr in frames if not fr.drop_reason]
+                    after = [fr.done_s for fr in done if fr.done_s >= t1]
+                    if after:
+                        m.time_to_recover_s = min(after) - t0
                 if comp in reason:
                     m.n_lost = sum(
                         1 for fr in frames
@@ -435,7 +669,8 @@ class ChaosModel:
                 m.burst_len = self._burst(frames, skips, t0, t1)
                 m.reconverge_frames = self._reconverge(frames, t0, t1)
                 out.append(m)
-        out.sort(key=lambda m: (m.start_s, m.component))
+        out.sort(key=lambda m: (m.start_s, m.component,
+                                -1 if m.cell is None else m.cell))
         return out
 
     def _burst(self, frames, skips, t0: float, t1: float) -> int:

@@ -298,3 +298,80 @@ def synthetic_flows(n_flows: int, seed: int = 0, *,
         dead=enq + 0.1 + r.random(n_flows) * 0.1,
         link_rate_bps=10.0 ** r.uniform(7.3, 8.3, n_flows),
         cohort=np.arange(n_flows) // max(n_ues, 1))
+
+
+def _merge_parked(parts):
+    """Merge parked-lane parts from either engine: ``StreamFlow`` lists
+    (oracle) flatten, ``ParkedFlows`` batches (vectorized) concatenate."""
+    parts = [p for p in parts if len(p)]
+    if not parts:
+        return None
+    if isinstance(parts[0], list):
+        return [f for p in parts for f in p]
+    return type(parts[0]).concat(parts)
+
+
+def chaos_drain(stream, flows: Dict[str, np.ndarray], harq_rng, *,
+                blackouts: Sequence = (),
+                batch_enqueue: bool = False) -> List:
+    """Drive one MAC stream (``RanStream`` OR ``VecRanStream`` -- the
+    engines share the batched park/adopt API) through a
+    ``synthetic_flows`` workload with scheduled mass blackouts.
+
+    ``blackouts``: ``(t0, t1, ue_ids)`` triples.  At ``t0`` every listed
+    UE's live flows leave the MAC in ONE batched ``migrate_ues`` call
+    (in-flight TBs flushed as HARQ losses); at ``t1`` they re-enter via
+    ONE ``adopt_batch``.  Enqueues and blackout edges merge onto a
+    single event clock, blackout edges first at a tie -- the timeline
+    engine's ordering.  With ``batch_enqueue`` every request is admitted
+    up front (the MAC gates service on each request's own ``enqueue_s``,
+    so admission order is irrelevant) and the clock only stops at
+    blackout edges: a 10k-flow chaos drain is a handful of ``advance``
+    dispatches, which is what the scale benchmark times.  Returns the
+    finished flow views in completion order; running the same schedule
+    on both engines must agree field-for-field (tests/test_ran_vec.py)."""
+    n_flows = int(len(flows["ue"]))
+    coh = flows.get("cohort")
+    events = [] if batch_enqueue else [
+        (float(flows["enq"][i]), 1, "enq", i) for i in range(n_flows)]
+    for t0, t1, ues in blackouts:
+        ues = [int(u) for u in ues]
+        events.append((float(t0), 0, "park", ues))
+        events.append((float(t1), 0, "adopt", ues))
+    events.sort(key=lambda e: (e[0], e[1]))
+    next_cohort = int(np.max(coh)) + 1 if coh is not None else 1
+    parked: Dict[int, List] = {}
+    done: List = []
+    if batch_enqueue:
+        for i in range(n_flows):
+            stream.enqueue(UplinkRequest(
+                ue_id=int(flows["ue"][i]),
+                n_bytes=int(flows["n_bytes"][i]),
+                enqueue_s=float(flows["enq"][i]),
+                deadline_s=float(flows["dead"][i]),
+                link_rate_bps=float(flows["link_rate_bps"][i])),
+                int(coh[i]) if coh is not None else 0)
+    for t, _rank, kind, arg in events:
+        done.extend(stream.advance(t, harq_rng))
+        if kind == "enq":
+            i = arg
+            stream.enqueue(UplinkRequest(
+                ue_id=int(flows["ue"][i]),
+                n_bytes=int(flows["n_bytes"][i]),
+                enqueue_s=float(flows["enq"][i]),
+                deadline_s=float(flows["dead"][i]),
+                link_rate_bps=float(flows["link_rate_bps"][i])),
+                int(coh[i]) if coh is not None else 0)
+        elif kind == "park":
+            for u, part in zip(arg,
+                               stream.migrate_ues(arg, flush_tb=True)):
+                if len(part):
+                    parked.setdefault(u, []).append(part)
+        else:
+            batch = _merge_parked([p for u in arg
+                                   for p in parked.pop(u, [])])
+            if batch is not None:
+                stream.adopt_batch(batch, t, next_cohort)
+                next_cohort += 1
+    done.extend(stream.advance(math.inf, harq_rng))
+    return done

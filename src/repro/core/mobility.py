@@ -310,6 +310,7 @@ class MobilityModel:
         self._slope = cfg.db_slope if cfg.db_slope is not None \
             else channel.db_slope()
         self._time = np.full(n_ues, math.nan)
+        self._fault_db = np.zeros(self.n_sites)
         self._pos = np.array([self.trajectory(u).position(0.0)
                               for u in range(n_ues)], float)
         # initial shadowing field: one correlated value per (UE, site)
@@ -328,10 +329,23 @@ class MobilityModel:
         return 10.0 * cfg.pathloss_exp * math.log10(d / cfg.ref_dist_m)
 
     def _rsrp(self, u: int) -> np.ndarray:
-        """Relative RSRP proxy per site: -pathloss + shadowing (dB)."""
+        """Relative RSRP proxy per site: -pathloss + shadowing (dB),
+        minus any chaos-plane fault penalty pinned on the site."""
         x, y = self._pos[u]
         return np.array([-self._pathloss_db(s.distance(x, y))
-                         for s in self.sites]) + self._shadow[u]
+                         for s in self.sites]) + self._shadow[u] \
+            - self._fault_db
+
+    # -- chaos-plane site faults ---------------------------------------------
+    def set_site_fault(self, cell: int, penalty_db: float):
+        """Pin an RSRP penalty on a site (a dying cell).  A3 sees the
+        faulted site collapse relative to its neighbors, so served UEs
+        evacuate through the ordinary handover machinery; UEs with no
+        better neighbor stay and eat the penalty as excess loss."""
+        self._fault_db[cell] = float(penalty_db)
+
+    def clear_site_fault(self, cell: int):
+        self._fault_db[cell] = 0.0
 
     def rate_scale(self, extra_db) -> float:
         """Rate multiplier for an interference-equivalent excess loss,
@@ -406,7 +420,7 @@ class MobilityModel:
 
         extra = (self._pathloss_db(self.sites[serv].distance(*pos))
                  - float(self._shadow[u, serv]) - float(self._doppler[u]))
-        extra = max(extra, 0.0)
+        extra = max(extra, 0.0) + float(self._fault_db[serv])
         return MobilityObs(serving=serv, extra_db=extra,
                            rate_scale=self.rate_scale(extra),
                            speed_mps=speed,

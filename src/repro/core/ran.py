@@ -622,6 +622,31 @@ class RanStream:
                 self._retire(cohort)
         return mine
 
+    def migrate_ues(self, ue_ids: Sequence[int],
+                    flush_tb: bool = False) -> List[List[StreamFlow]]:
+        """Batched park (blackout / evacuation plumbing): pop every
+        listed UE's unfinished flows, one list per requested UE.  The
+        oracle semantics ARE the per-UE ``migrate_ue`` loop; the
+        vectorized twin (core/ran_vec.py) does the same pop with ONE
+        array compaction.  ``flush_tb=True`` charges each popped flow's
+        in-flight HARQ transport block as a loss -- the caller-side rule
+        every park site applies."""
+        out = [self.migrate_ue(u) for u in ue_ids]
+        if flush_tb:
+            for fls in out:
+                for f in fls:
+                    if f.granted > f.granted_at_admit:
+                        f.n_retx += 1
+        return out
+
+    def adopt_batch(self, flows: Sequence[StreamFlow], enqueue_s: float,
+                    cohort: int) -> List[StreamFlow]:
+        """Batched twin of ``adopt``: re-admit parked flows in order,
+        each re-enqueued at ``max(its own enqueue, enqueue_s)`` (a flow
+        parked before it would have entered keeps its own instant)."""
+        return [self.adopt(f, max(f.req.enqueue_s, enqueue_s), cohort)
+                for f in flows]
+
     def adopt(self, flow: StreamFlow, enqueue_s: float,
               cohort: int) -> StreamFlow:
         """Admit a migrated flow: remaining bytes re-enqueue here at

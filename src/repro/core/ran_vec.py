@@ -723,6 +723,77 @@ class VecRanCell:
 # continuous-TTI streaming twin
 # ---------------------------------------------------------------------------
 
+_PARK_COLS = ("ue", "bpp", "coh", "rem", "grt", "act", "ntx", "nrx", "gaa")
+
+
+class ParkedFlows:
+    """Blackout-parked flows in ARRAY form (the parked lane, DESIGN.md
+    §11): the rows ``migrate_ues`` pops from a ``VecRanStream`` kept as
+    column arrays plus the carried request/meta object lists, so a mass
+    park/adopt cycle stays a handful of numpy ops instead of per-flow
+    ``StreamFlow`` shuffling.  Columns carry exactly what ``adopt_batch``
+    re-admits -- remaining bits and the accumulated grant/HARQ counters
+    (enqueue/deadline/rate re-derive from the carried request) -- plus
+    the popped cohort and spectral efficiency so ``flows()`` can
+    materialize oracle-identical ``StreamFlow`` views for parity tests."""
+
+    __slots__ = _PARK_COLS + ("reqs", "meta")
+
+    def __init__(self, ue=None, bpp=None, coh=None, rem=None, grt=None,
+                 act=None, ntx=None, nrx=None, gaa=None, reqs=None,
+                 meta=None):
+        zi, zf = np.zeros(0, np.int64), np.zeros(0, np.float64)
+        self.ue = zi if ue is None else ue
+        self.bpp = zf if bpp is None else bpp
+        self.coh = zi if coh is None else coh
+        self.rem = zf if rem is None else rem
+        self.grt = zi if grt is None else grt
+        self.act = zi if act is None else act
+        self.ntx = zi if ntx is None else ntx
+        self.nrx = zi if nrx is None else nrx
+        self.gaa = zi if gaa is None else gaa
+        self.reqs = [] if reqs is None else reqs
+        self.meta = [] if meta is None else meta
+
+    def __len__(self) -> int:
+        return int(self.ue.size)
+
+    def take(self, idx: np.ndarray) -> "ParkedFlows":
+        """Row subset (order-preserving fancy index)."""
+        return ParkedFlows(
+            **{c: getattr(self, c)[idx] for c in _PARK_COLS},
+            reqs=[self.reqs[i] for i in idx],
+            meta=[self.meta[i] for i in idx])
+
+    @classmethod
+    def concat(cls, batches: Sequence["ParkedFlows"]) -> "ParkedFlows":
+        batches = [b for b in batches if len(b)]
+        if not batches:
+            return cls()
+        return cls(
+            **{c: np.concatenate([getattr(b, c) for b in batches])
+               for c in _PARK_COLS},
+            reqs=[r for b in batches for r in b.reqs],
+            meta=[m for b in batches for m in b.meta])
+
+    def flush_tb(self):
+        """Charge every in-flight HARQ transport block as a loss (the
+        park-time rule: the adopting cell cannot soft-combine another
+        cell's HARQ process) -- one vectorized compare."""
+        self.nrx = self.nrx + (self.grt > self.gaa)
+
+    def flows(self) -> List[StreamFlow]:
+        """Materialize ``StreamFlow`` views (tests / python interop);
+        the hot path never calls this."""
+        return [StreamFlow(
+            req=self.reqs[i], cohort=int(self.coh[i]), meta=self.meta[i],
+            rem_bits=float(self.rem[i]), bpp=float(self.bpp[i]),
+            granted=int(self.grt[i]), act_slots=int(self.act[i]),
+            n_tx=int(self.ntx[i]), n_retx=int(self.nrx[i]),
+            finish_s=float("nan"), granted_at_admit=int(self.gaa[i]))
+            for i in range(len(self))]
+
+
 class VecRanStream:
     """Drop-in ``RanStream`` twin: flow state as growing numpy arrays in
     admission order, TTIs executed by ``_stream_chunk``.  Finished /
@@ -990,6 +1061,86 @@ class VecRanStream:
         self._cohort_open[cohort] = self._cohort_open.get(cohort, 0) + 1
         return self._flow_view(i)
 
+    # -- batched park/adopt (mass-blackout hot path) -------------------------
+    def migrate_ues(self, ue_ids: Sequence[int],
+                    flush_tb: bool = False) -> List["ParkedFlows"]:
+        """Pop every live flow belonging to ``ue_ids`` with ONE array
+        compaction (vs K× ``migrate_ue`` full rebuilds for a K-UE
+        blackout).  Returns one ``ParkedFlows`` per requested UE, each
+        in admission order -- the exact per-UE lists the oracle's
+        ``migrate_ues`` produces, in array form.  ``flush_tb`` applies
+        the blackout in-flight-TB loss rule vectorized."""
+        n = self._n
+        ids = np.asarray(list(ue_ids), np.int64)
+        sel = (np.isin(self._ue[:n], ids) & (self._rem[:n] > 0.0))
+        mine = np.flatnonzero(sel)
+        batch = ParkedFlows(
+            ue=self._ue[mine].copy(), bpp=self._bpp[mine].copy(),
+            coh=self._coh[mine].copy(), rem=self._rem[mine].copy(),
+            grt=self._grt[mine].copy(), act=self._act[mine].copy(),
+            ntx=self._ntx[mine].copy(), nrx=self._nrx[mine].copy(),
+            gaa=self._gaa[mine].copy(),
+            reqs=[self._reqs[i] for i in mine],
+            meta=[self._meta[i] for i in mine])
+        if flush_tb:
+            batch.flush_tb()
+        if mine.size:
+            for c, cnt in zip(*np.unique(batch.coh, return_counts=True)):
+                c = int(c)
+                self._cohort_open[c] -= int(cnt)
+                if self._cohort_open[c] == 0:
+                    del self._cohort_open[c]
+            kidx = np.flatnonzero(~sel)
+            for name in ("_ue", "_enq", "_dead", "_bpp", "_rem", "_fin",
+                         "_grt", "_act", "_ntx", "_nrx", "_gaa", "_coh"):
+                arr = getattr(self, name)
+                arr[:kidx.size] = arr[kidx]
+            self._meta = [self._meta[i] for i in kidx]
+            self._reqs = [self._reqs[i] for i in kidx]
+            self._n = kidx.size
+            self._compact()
+        return [batch.take(np.flatnonzero(batch.ue == u)) for u in ids]
+
+    def _reserve(self, k: int):
+        while self._n + k > self._cap:
+            self._grow()
+
+    def adopt_batch(self, parked: "ParkedFlows", enqueue_s: float,
+                    cohort: int) -> "ParkedFlows":
+        """Re-admit a parked batch at recovery with slice assignment --
+        the array twin of per-flow ``adopt``.  Each flow's enqueue
+        becomes ``max(original, enqueue_s)`` (a flow parked before it
+        would have entered keeps its own entry time), counters carry,
+        and ``granted_at_admit`` snapshots the accumulated grant, all
+        matching the oracle's ``adopt_batch`` field-for-field."""
+        k = len(parked)
+        if k == 0:
+            return parked
+        self._reserve(k)
+        i0 = self._n
+        sl = slice(i0, i0 + k)
+        reqs = [dataclasses.replace(r, enqueue_s=max(r.enqueue_s, enqueue_s))
+                for r in parked.reqs]
+        self._ue[sl] = parked.ue
+        self._enq[sl] = [r.enqueue_s for r in reqs]
+        self._dead[sl] = [r.deadline_s for r in reqs]
+        # scalar per-request bits_per_prb, matching _append bit-for-bit
+        self._bpp[sl] = [float(self.cell.bits_per_prb(r.link_rate_bps))
+                         for r in reqs]
+        self._rem[sl] = parked.rem
+        self._fin[sl] = np.nan
+        self._grt[sl] = parked.grt
+        self._act[sl] = parked.act
+        self._ntx[sl] = parked.ntx
+        self._nrx[sl] = parked.nrx
+        self._gaa[sl] = parked.grt
+        self._coh[sl] = cohort
+        self._meta.extend(parked.meta)
+        self._reqs.extend(reqs)
+        self._n = i0 + k
+        self._cohort_open[cohort] = self._cohort_open.get(cohort, 0) + k
+        return parked
+
     def report(self, flow: StreamFlow) -> GrantReport:
         cfg = self.cfg
         tx_s = float(flow.finish_s - flow.req.enqueue_s)
@@ -1007,8 +1158,9 @@ class VecRanStream:
 
     @property
     def backlog_bytes(self) -> float:
-        live = np.flatnonzero(self._rem[:self._n] > 0.0)
-        return sum(float(self._rem[i]) for i in live) / 8.0
+        n = self._n
+        live = self._rem[:n] > 0.0
+        return float(self._rem[:n][live].sum() / 8.0)
 
     def telemetry_sample(self) -> Dict[str, float]:
         """Twin of ``RanStream.telemetry_sample``: the identical

@@ -425,9 +425,11 @@ class Telemetry:
             return
         for name, t, attrs in chaos.telemetry_events():
             if "t1" in attrs:
-                self.spans.append(Span(name, "chaos", t, attrs["t1"], -1, 0,
-                                       -1, {k: v for k, v in attrs.items()
-                                            if k != "t1"} or None))
+                cell = int(attrs.get("cell", 0))
+                self.spans.append(Span(name, "chaos", t, attrs["t1"], -1,
+                                       cell, -1,
+                                       {k: v for k, v in attrs.items()
+                                        if k not in ("t1", "cell")} or None))
             else:
                 self.instant(name, t, **attrs)
 

@@ -253,6 +253,29 @@ def _capture_times(n: int, n_frames: int, fps: np.ndarray,
     return t
 
 
+def _by_cell(ues: Sequence[int], mob) -> List[Tuple[int, List[int]]]:
+    """Group UEs by serving cell, preserving the given UE order inside
+    each group (= per-stream append order, so batched park/adopt stays
+    field-exact vs the per-UE oracle loop).  No mobility = one cell."""
+    groups: Dict[int, List[int]] = {}
+    for u in ues:
+        groups.setdefault(int(mob.serving[u]) if mob is not None else 0,
+                          []).append(int(u))
+    return sorted(groups.items())
+
+
+def _pcat(parts: List[Any]):
+    """Merge a UE's parked-lane parts: python ``StreamFlow`` lists
+    (oracle engine) flatten, ``ParkedFlows`` batches (vectorized engine)
+    concatenate -- the two engines' parked lanes stay duck-compatible."""
+    parts = [p for p in parts if len(p)]
+    if not parts:
+        return []
+    if isinstance(parts[0], list):
+        return [f for p in parts for f in p]
+    return type(parts[0]).concat(parts)
+
+
 def run_stream(sim: CellSimulator, interference, imgs=None,
                option: Optional[str] = None, *, fps=2.0, jitter_s=0.0,
                inflight: Optional[int] = None,
@@ -312,7 +335,8 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
     chaos_events: List[Tuple[float, str, Any]] = []
     if chaos is not None:
         chaos_events = chaos.begin(
-            float(captures.max()) if captures.size else 0.0)
+            float(captures.max()) if captures.size else 0.0,
+            n_cells=(mob.n_sites if mob is not None else 1))
     if sim.ran is None:
         streams, harq_rngs = None, []
     else:
@@ -373,6 +397,7 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
     gap_until = np.zeros(n)        # uplink stalled until (path relocation)
     mob_obs: List[Any] = [None] * n    # latest MobilityObs per UE
     parked: List[List[Any]] = [[] for _ in range(n)]   # blackout-parked flows
+    cell_parked: Dict[int, List[int]] = {}   # cell-blackout window -> UEs
     cohort = 0
 
     by_req: Dict[int, _Frame] = {}
@@ -522,24 +547,73 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
                 b_ues, b1 = payload
                 for u in b_ues:
                     gap_until[u] = max(gap_until[u], b1)
-                    if streams is not None:
-                        serv = int(mob.serving[u]) if mob is not None else 0
-                        fls = streams[serv].migrate_ue(u)
-                        for fl in fls:
-                            if fl.granted > fl.granted_at_admit:
-                                fl.n_retx += 1   # in-flight TB lost
-                        parked[u].extend(fls)
-                    else:
+                if streams is not None:
+                    # ONE batched park per (event, cell): a K-UE blackout
+                    # costs one array compaction, not K migrate_ue
+                    # rebuilds; in-flight TB losses are flushed
+                    # vectorized inside migrate_ues
+                    for c, ues in _by_cell(b_ues, mob):
+                        for u, part in zip(ues,
+                                           streams[c].migrate_ues(
+                                               ues, flush_tb=True)):
+                            parked[u].append(part)
+                else:
+                    for u in b_ues:
                         radio_free[u] = max(radio_free[u], b1)
             elif kind == "blackout_end":
-                for u in payload:
-                    if streams is not None:
-                        serv = int(mob.serving[u]) if mob is not None else 0
-                        for fl in parked[u]:
-                            streams[serv].adopt(
-                                fl, max(fl.req.enqueue_s, t), cohort)
-                        parked[u] = []
-                    if controllers is not None:
+                if streams is not None:
+                    # one batched adopt per current serving cell (the
+                    # serving cell may have changed while parked)
+                    for c, ues in _by_cell(payload, mob):
+                        batch = _pcat([p for u in ues for p in parked[u]])
+                        if len(batch):
+                            streams[c].adopt_batch(batch, t, cohort)
+                        for u in ues:
+                            parked[u] = []
+                if controllers is not None:
+                    for u in payload:
+                        controllers[u].notify_outage()
+            elif kind == "cell_blackout_start":
+                w, bc, b1 = payload
+                # a weather front reached cell `bc`: its served UEs park
+                # and the site takes an RSRP fault penalty, so A3 lets
+                # them flee to a healthy neighbor (no gap pin -- frames
+                # captured after evacuation ride the new cell)
+                c_ues = [u for u in range(n)
+                         if (int(mob.serving[u]) if mob is not None else 0)
+                         == bc]
+                cell_parked[w] = c_ues
+                if mob is not None:
+                    mob.set_site_fault(
+                        bc, chaos.cfg.correlation.fault_penalty_db)
+                else:
+                    for u in c_ues:
+                        gap_until[u] = max(gap_until[u], b1)
+                if streams is not None:
+                    for u, part in zip(c_ues,
+                                       streams[bc].migrate_ues(
+                                           c_ues, flush_tb=True)):
+                        parked[u].append(part)
+                elif mob is None:
+                    for u in c_ues:
+                        radio_free[u] = max(radio_free[u], b1)
+                if tele is not None:
+                    tele.instant("cell_blackout", t, cell=bc,
+                                 n_parked=len(c_ues))
+            elif kind == "cell_blackout_end":
+                w, bc = payload
+                if mob is not None:
+                    mob.clear_site_fault(bc)
+                c_ues = cell_parked.pop(w, [])
+                if streams is not None:
+                    for c, ues in _by_cell(c_ues, mob):
+                        batch = _pcat([p for u in ues for p in parked[u]])
+                        if len(batch):
+                            streams[c].adopt_batch(batch, t, cohort)
+                        for u in ues:
+                            parked[u] = []
+                if controllers is not None:
+                    for u in c_ues:
                         controllers[u].notify_outage()
         if not group:
             continue
@@ -826,6 +900,26 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
     st.ue_active_s = float(active_s.sum())
     st.n_handovers = int(mob.handover_count.sum()) if mob is not None else 0
 
+    # per-cell SLO breakdown: every admitted frame's outcome attributed
+    # to the cell serving it at capture (window drops via their logs)
+    cell_acc: Dict[int, Dict[str, int]] = {}
+
+    def _cacc(c: int, key: str):
+        d = cell_acc.setdefault(int(c), {"n_completed": 0, "n_dropped": 0,
+                                         "n_lost_edge": 0, "n_lost_path": 0})
+        d[key] += 1
+
+    for fr in frames:
+        if fr.drop_reason == "edge_outage":
+            _cacc(fr.serving_cell, "n_lost_edge")
+        elif fr.drop_reason:
+            _cacc(fr.serving_cell, "n_lost_path")
+        else:
+            _cacc(fr.serving_cell, "n_completed")
+    for log in dropped_logs:
+        _cacc(log.serving_cell, "n_dropped")
+    st.cell_stats = cell_acc
+
     # per-UE wall-clock energy: active intervals at P_active, the rest of
     # the UE's span idle, radio charged per granted airtime (no
     # double-counting across pipelined frames)
@@ -844,7 +938,8 @@ def run_stream(sim: CellSimulator, interference, imgs=None,
         skips = [(l.ue_id, l.frame_idx, l.capture_s) for l in dropped_logs]
         recovery = chaos.finalize(frames, skips)
         st.n_outages = (len(chaos.edge_windows) + len(chaos.upf_windows)
-                        + len(chaos.blackout_windows))
+                        + len(chaos.blackout_windows)
+                        + len(chaos.cell_blackout_windows))
         if tele is not None:
             tele.record_chaos(chaos)
 

@@ -373,6 +373,268 @@ def test_reconvergence_is_measured_for_adaptive_runs():
     assert m.reconverge_frames is not None and m.reconverge_frames >= 1.0
 
 
+# ---------------------------------------------------------------------------
+# horizon clamping + censoring (the OutageSpec bugfix)
+# ---------------------------------------------------------------------------
+
+def test_outage_windows_clamp_to_horizon_and_censor():
+    spec = OutageSpec(schedule=((5.0, 100.0), (30.0, 1.0)))
+    wins, cens = spec.windows_censored(np.random.default_rng(0), 20.0)
+    # the overlong window clips to the horizon and is censored; the
+    # window opening after the horizon never happens at all
+    assert wins == [(5.0, 20.0)]
+    assert cens == [True]
+    # windows() keeps returning the clamped list (old callers)
+    assert OutageSpec(schedule=((5.0, 100.0),)).windows(
+        np.random.default_rng(0), 20.0) == [(5.0, 20.0)]
+
+
+def test_censored_window_reports_no_fake_recovery():
+    """A fault outliving the run must NOT report a time_to_recover off
+    the post-horizon drain: the window is flagged censored and the
+    recovery time stays NaN."""
+    cm = ChaosModel(ChaosConfig(
+        upf_outage=OutageSpec(schedule=((8.0, 1000.0),)),
+        heartbeat_period_s=0.25, heartbeat_timeout_s=0.6))
+    r = _sim(cm).run_stream(_trace(20), option="split3", fps=2.0)
+    [m] = r.recovery
+    assert m.censored
+    assert m.end_s <= 9.5 + 1e-9          # clipped to the capture horizon
+    assert math.isnan(m.time_to_recover_s)
+    # an identical fault that DOES recover in-run is not censored
+    cm2 = ChaosModel(ChaosConfig(
+        upf_outage=OutageSpec(schedule=((8.0, 0.5),)),
+        heartbeat_period_s=0.25, heartbeat_timeout_s=0.6))
+    r2 = _sim(cm2).run_stream(_trace(20), option="split3", fps=2.0)
+    [m2] = r2.recovery
+    assert not m2.censored and not math.isnan(m2.time_to_recover_s)
+
+
+# ---------------------------------------------------------------------------
+# churn hazard integrates over the whole sojourn (the ChurnSpec bugfix)
+# ---------------------------------------------------------------------------
+
+def test_flash_crowd_opening_mid_sojourn_pulls_ues_back():
+    """Regression: an absent UE with a long off-mean must return during
+    a flash crowd that starts AFTER its sojourn began.  The old code
+    evaluated intensity only at the sojourn start (t=0, intensity 1.0),
+    so the crowd at t=2 never compressed the absence."""
+    crowd = ChurnSpec(initial_p=0.0, mean_off_s=10.0, mean_on_s=0.0,
+                      flash_crowds=((2.0, 100.0, 9.0),))
+    calm = ChurnSpec(initial_p=0.0, mean_off_s=10.0, mean_on_s=0.0)
+    boosted = crowd.intervals(np.random.default_rng(3), 100.0, 16)
+    base = calm.intervals(np.random.default_rng(3), 100.0, 16)
+    moved = 0
+    for b, c in zip(boosted, base):
+        assert b and c
+        tb, tc = b[0][0], c[0][0]
+        if tc <= 2.0:
+            assert tb == tc      # returned before the crowd: untouched
+            continue
+        moved += 1
+        assert 2.0 < tb < tc     # crowd compressed the remaining absence
+        # closed-form check: hazard(0, tb) == the same exponential target
+        assert crowd._hazard(0.0, tb) == pytest.approx(tc, rel=1e-12)
+    assert moved > 0, "no UE outlasted the crowd start (weak scenario)"
+
+
+def test_diurnal_hazard_inverts_exactly():
+    """With a diurnal sinusoid the inverse integrated hazard is found by
+    bisection on the exact antiderivative: the returned instant must
+    satisfy the hazard equation to tolerance, and the draw budget must
+    not move vs an inert spec."""
+    spec = ChurnSpec(initial_p=0.0, mean_off_s=5.0, mean_on_s=0.0,
+                     diurnal_period_s=20.0, diurnal_depth=0.8,
+                     flash_crowds=((3.0, 4.0, 5.0),))
+    for t, target in ((0.0, 3.0), (1.5, 7.0), (11.0, 0.25)):
+        T = spec._off_end(t, target)
+        assert spec._hazard(t, T) == pytest.approx(target, rel=1e-9)
+    ra, rb = np.random.default_rng(5), np.random.default_rng(5)
+    spec.intervals(ra, 50.0, 6)
+    ChurnSpec().intervals(rb, 50.0, 6)
+    assert ra.random() == rb.random()
+
+
+# ---------------------------------------------------------------------------
+# correlated failures (CorrelationSpec)
+# ---------------------------------------------------------------------------
+
+def test_site_power_takes_edge_and_upf_down_together():
+    from repro.core.chaos import CorrelationSpec
+    cm = ChaosModel(ChaosConfig(
+        edge_outage=OutageSpec(), upf_outage=OutageSpec(),
+        correlation=CorrelationSpec(site_power=((4.0, 3.0),))))
+    cm.reset(3, np.random.SeedSequence(2))
+    ev = cm.begin(20.0)
+    assert cm.edge_windows == cm.upf_windows == [(4.0, 7.0)]
+    assert cm.site_windows == [(4.0, 7.0)]
+    # heartbeats tick even though the component specs are inert: a
+    # correlation-injected outage still has to be *detected*
+    assert any(k == "heartbeat" for _t, k, _p in ev)
+
+
+def test_zero_correlation_replays_bitwise():
+    """An all-defaults CorrelationSpec schedules nothing and must leave
+    every schedule AND every engine's trace exactly where the
+    correlation-free config leaves them (the 5th-grandchild rng spawn is
+    index-stable)."""
+    from repro.core.chaos import CorrelationSpec
+
+    def chaos(with_corr):
+        return ChaosModel(ChaosConfig(
+            edge_outage=OutageSpec(rate_hz=0.1, mean_duration_s=1.0),
+            churn=ChurnSpec(initial_p=0.8, mean_on_s=6.0, mean_off_s=3.0),
+            correlation=CorrelationSpec() if with_corr else None))
+
+    a, b = chaos(False), chaos(True)
+    a.reset(3, np.random.SeedSequence(42))
+    b.reset(3, np.random.SeedSequence(42))
+    a.begin(60.0, n_cells=2)
+    b.begin(60.0, n_cells=2)
+    assert a.edge_windows == b.edge_windows
+    assert a._churn_iv == b._churn_iv
+    assert b.site_windows == [] and b.cell_blackout_windows == []
+    for engine in ("python", "vectorized"):
+        ra = _sim(chaos(False), ran=True, engine=engine).run_stream(
+            _trace(12), option="split3", fps=1.0)
+        rb = _sim(chaos(True), ran=True, engine=engine).run_stream(
+            _trace(12), option="split3", fps=1.0)
+        assert _rows(ra) == _rows(rb)
+
+
+def test_outage_triggered_surge_pins_crowds_to_recovery():
+    from repro.core.chaos import CorrelationSpec
+    churn = ChurnSpec(initial_p=0.0, mean_off_s=50.0, mean_on_s=0.0)
+    surged = ChaosModel(ChaosConfig(
+        upf_outage=OutageSpec(schedule=((5.0, 2.0),)), churn=churn,
+        correlation=CorrelationSpec(surge_boost=9.0,
+                                    surge_duration_s=5.0)))
+    plain = ChaosModel(ChaosConfig(
+        upf_outage=OutageSpec(schedule=((5.0, 2.0),)), churn=churn))
+    surged.reset(16, np.random.SeedSequence(8))
+    plain.reset(16, np.random.SeedSequence(8))
+    surged.begin(60.0)
+    plain.begin(60.0)
+    assert surged.effective_churn.flash_crowds == ((7.0, 5.0, 9.0),)
+    moved = 0
+    for s_iv, p_iv in zip(surged._churn_iv, plain._churn_iv):
+        ts = s_iv[0][0] if s_iv else math.inf
+        tp = p_iv[0][0] if p_iv else math.inf
+        if tp <= 7.0:
+            assert ts == tp          # returned before recovery: untouched
+        else:
+            assert ts <= tp
+            moved += ts < tp
+    assert moved > 0, "surge never accelerated a re-entry (weak scenario)"
+
+
+# ---------------------------------------------------------------------------
+# mass blackout + correlated chaos: python vs vectorized field-exact
+# ---------------------------------------------------------------------------
+
+def test_mass_blackout_batched_parity():
+    """ALL UEs black out in one event (blackout_ues=None): the
+    vectorized engine takes the batched park/adopt path (one compaction,
+    one adopt splice) and must stay field-exact vs the per-flow oracle."""
+    def chaos():
+        return ChaosModel(ChaosConfig(
+            blackout=OutageSpec(schedule=((3.0, 2.0),))))
+    res = {}
+    for engine in ("python", "vectorized"):
+        res[engine] = _sim(chaos(), ran=True, engine=engine,
+                           n_ues=6).run_stream(
+            _trace(20, n_ues=6), option="split3", fps=2.0)
+    assert _rows(res["python"]) == _rows(res["vectorized"])
+    st = res["vectorized"].stats
+    assert st.n_lost_edge == st.n_lost_path == 0   # blackout loses nothing
+    assert st.n_completed + st.n_dropped == 20 * 6
+
+
+def test_correlated_site_outage_parity():
+    """Correlated edge+dUPF site outages + surge churn: the two engines
+    agree field-for-field through detection, failover and re-entry."""
+    from repro.core.chaos import CorrelationSpec
+
+    def chaos():
+        return ChaosModel(ChaosConfig(
+            edge_outage=OutageSpec(), upf_outage=OutageSpec(),
+            churn=ChurnSpec(initial_p=0.7, mean_on_s=9.0, mean_off_s=4.0),
+            correlation=CorrelationSpec(site_power=((3.0, 2.0),),
+                                        surge_boost=6.0,
+                                        surge_duration_s=4.0),
+            heartbeat_period_s=0.25, heartbeat_timeout_s=0.6))
+    res = {}
+    for engine in ("python", "vectorized"):
+        res[engine] = _sim(chaos(), ran=True, engine=engine).run_stream(
+            _trace(20), option="split3", fps=2.0)
+    assert _rows(res["python"]) == _rows(res["vectorized"])
+    assert res["python"].stats.n_outages >= 1
+
+
+# ---------------------------------------------------------------------------
+# weather fronts: cell-targeted blackouts, A3 evacuation, per-cell SLOs
+# ---------------------------------------------------------------------------
+
+def _two_cell_sim(chaos, *, engine="python", n_ues=4, seed=11):
+    from repro.core.mobility import (MobilityConfig, MobilityModel,
+                                     StaticTrajectory, two_cell_sites)
+    from repro.core.ran import MultiCell
+    sites = two_cell_sites(400.0)
+    traj = [StaticTrajectory(150.0, 0.0) if u % 2 == 0
+            else StaticTrajectory(250.0, 0.0) for u in range(n_ues)]
+    mob = MobilityModel(sites, traj,
+                        MobilityConfig(a3_ttt_s=0.4,
+                                       relocation_gap_s=0.05))
+    return CellSimulator(
+        plan=_plan(), system=_system(), n_ues=n_ues, seed=seed,
+        execute_model=False, frame_budget_s=3.0,
+        ran=MultiCell([RanCell(policy=make_policy("edf"),
+                               cfg=RanConfig(tti_s=0.005))
+                       for _ in sites]),
+        engine=engine, mobility=mob, chaos=chaos)
+
+
+def _front_chaos(offset_s):
+    from repro.core.chaos import CorrelationSpec
+    return ChaosModel(ChaosConfig(correlation=CorrelationSpec(
+        weather_front=((4.0, 3.0),), front_offset_s=offset_s)))
+
+
+def test_weather_front_evacuates_the_dying_cell():
+    """A front hitting ONE cell (huge offset pushes the other window
+    past the horizon): the faulted site's RSRP penalty makes A3 hand its
+    UEs to the healthy neighbor, and the per-cell breakdown attributes
+    the evacuees' completions to the new cell."""
+    r = _two_cell_sim(_front_chaos(1e6)).run_stream(
+        _trace(24, n_ues=4), option="split3", fps=2.0)
+    st = r.stats
+    assert st.n_outages == 1              # cell 1's window fell off the run
+    assert st.n_handovers > 0, "nobody evacuated the faulted cell"
+    # evacuees complete frames served by cell 1 while the front is live
+    assert any(l.serving_cell == 1 and 4.0 < l.capture_s < 7.0
+               for l in r.logs if l.ue_id % 2 == 0 and not l.dropped)
+    # per-cell SLO breakdown covers both cells and sums to the totals
+    assert set(st.cell_stats) == {0, 1}
+    for key, total in (("n_completed", st.n_completed),
+                       ("n_dropped", st.n_dropped),
+                       ("n_lost_edge", st.n_lost_edge),
+                       ("n_lost_path", st.n_lost_path)):
+        assert sum(c[key] for c in st.cell_stats.values()) == total
+    assert 0.0 <= st.cell_availability(0) <= 1.0
+    assert st.cell_availability(7) == 1.0     # unknown cell: vacuous
+
+
+def test_weather_front_python_vs_vectorized_parity():
+    res = {}
+    for engine in ("python", "vectorized"):
+        res[engine] = _two_cell_sim(_front_chaos(1.0),
+                                    engine=engine).run_stream(
+            _trace(24, n_ues=4), option="split3", fps=2.0)
+    assert _rows(res["python"]) == _rows(res["vectorized"])
+    assert res["python"].stats.cell_stats \
+        == res["vectorized"].stats.cell_stats
+
+
 def test_chaos_refuses_lockstep_engine():
     sim = _sim(_inert_chaos())
     with pytest.raises(ValueError, match="absolute"):

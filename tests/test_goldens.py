@@ -60,6 +60,7 @@ SCALAR_FIELDS = ("option", "interference_db", "delay_s", "head_s",
 # goldens' field sets -- and hence their committed fixtures -- unchanged)
 EXTRA_FIELDS = {
     "chaos_outage": ("drop_reason",),
+    "chaos_correlated": ("drop_reason",),
 }
 
 
@@ -146,10 +147,49 @@ def chaos_outage_result(telemetry=None):
                           fps=0.4, jitter_s=0.05, inflight=2)
 
 
+def chaos_correlated_result(telemetry=None):
+    """Correlated multi-cell chaos (PR 10): a site-power window taking
+    edge + dUPF down together, a weather front sweeping cell blackouts
+    across a two-site grid (A3 evacuation through the fault penalty),
+    an outage-triggered churn surge, and a window censored by the
+    horizon -- pins CorrelationSpec's derived schedules AND the batched
+    park/adopt + per-cell accounting plumbing."""
+    from repro.core.chaos import (ChaosConfig, ChaosModel, ChurnSpec,
+                                  CorrelationSpec, OutageSpec)
+    from repro.core.mobility import (MobilityConfig, MobilityModel,
+                                     StaticTrajectory, two_cell_sites)
+    from repro.core.ran import MultiCell
+    system = _system()
+    plan = SwinSplitPlan(SWIN_FULL, params=None)
+    sites = two_cell_sites(400.0)
+    traj = [StaticTrajectory(150.0, 0.0), StaticTrajectory(250.0, 0.0),
+            StaticTrajectory(30.0, 0.0)]
+    mob = MobilityModel(sites, traj,
+                        MobilityConfig(a3_ttt_s=0.5, relocation_gap_s=0.05))
+    chaos = ChaosModel(ChaosConfig(
+        upf_outage=OutageSpec(schedule=((10.0, 3.0),)),
+        churn=ChurnSpec(initial_p=0.6, mean_on_s=9.0, mean_off_s=6.0),
+        correlation=CorrelationSpec(
+            site_power=((4.0, 2.0),),
+            weather_front=((15.0, 2.0),), front_offset_s=1.5,
+            surge_boost=6.0, surge_duration_s=3.0),
+        heartbeat_period_s=0.25, heartbeat_timeout_s=0.6))
+    sim = CellSimulator(plan=plan, system=system, n_ues=3, seed=11,
+                        execute_model=False, frame_budget_s=3.0,
+                        controller=_controller(system),
+                        ran=MultiCell([RanCell(policy=make_policy("edf"),
+                                               cfg=RanConfig(tti_s=0.005))
+                                       for _ in sites]),
+                        mobility=mob, chaos=chaos, telemetry=telemetry)
+    return sim.run_stream(np.tile(_trace(), (2, 1)), option=None,
+                          fps=0.4, jitter_s=0.05, inflight=2)
+
+
 SCENARIOS = {
     "legacy_lockstep": legacy_lockstep_result,
     "ran_streaming": ran_streaming_result,
     "chaos_outage": chaos_outage_result,
+    "chaos_correlated": chaos_correlated_result,
 }
 
 
@@ -287,7 +327,9 @@ def test_chaos_golden_covers_the_fault_paths():
 
 if __name__ == "__main__":
     if len(sys.argv) > 1 and sys.argv[1] == "regen":
-        for name in sorted(SCENARIOS):
+        # `regen <name> ...` regenerates just the named scenarios, so
+        # adding a fixture never rewrites the committed existing ones
+        for name in (sys.argv[2:] or sorted(SCENARIOS)):
             print("wrote", dump_golden(name))
     else:
         print(__doc__)

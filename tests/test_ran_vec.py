@@ -244,6 +244,99 @@ def test_stream_edf_same_deadline_fallback():
 
 
 # ---------------------------------------------------------------------------
+# batched park/adopt (mass blackout) + vectorized backlog
+# ---------------------------------------------------------------------------
+
+def _chaos_pair(pol="edf", n_flows=200, n_ues=40, seed=3):
+    from repro.core.engine_vec import synthetic_flows
+    cfg = RanConfig(tti_s=0.002)
+    flows = synthetic_flows(n_flows, seed=seed, n_ues=n_ues)
+    os_ = RanStream(RanCell(policy=make_policy(pol), cfg=cfg))
+    vs = VecRanStream(RanCell(policy=make_policy(pol), cfg=cfg),
+                      n_ues=n_ues)
+    return os_, vs, flows
+
+
+def test_backlog_bytes_vectorized_value_identity():
+    """The vectorized ``backlog_bytes`` must equal the oracle's python
+    sum exactly -- and equal an explicit per-flow float sum over its own
+    arrays (the pre-fix semantics), not just approximately."""
+    os_, vs, flows = _chaos_pair(n_flows=60, n_ues=12)
+    r1, r2 = (np.random.default_rng(9) for _ in range(2))
+    for i in range(60):
+        req = UplinkRequest(
+            ue_id=int(flows["ue"][i]), n_bytes=int(flows["n_bytes"][i]),
+            enqueue_s=float(flows["enq"][i]),
+            deadline_s=float(flows["dead"][i]),
+            link_rate_bps=float(flows["link_rate_bps"][i]))
+        os_.enqueue(req, int(flows["cohort"][i]))
+        vs.enqueue(req, int(flows["cohort"][i]))
+    for t in (0.05, 0.09, 0.13, float("inf")):
+        os_.advance(t, r1)
+        vs.advance(t, r2)
+        n = vs._n
+        manual = sum(float(vs._rem[i]) for i in
+                     np.flatnonzero(vs._rem[:n] > 0.0)) / 8.0
+        assert vs.backlog_bytes == manual
+        assert vs.backlog_bytes == os_.backlog_bytes
+
+
+def test_migrate_ues_matches_per_ue_oracle():
+    """One batched ``migrate_ues`` == K sequential ``migrate_ue`` calls:
+    identical parked flows (admission order, TB-flush rule) and an
+    identical surviving stream."""
+    os_, vs, flows = _chaos_pair(n_flows=120, n_ues=24)
+    r1, r2 = (np.random.default_rng(17) for _ in range(2))
+    for i in range(120):
+        req = UplinkRequest(
+            ue_id=int(flows["ue"][i]), n_bytes=int(flows["n_bytes"][i]),
+            enqueue_s=float(flows["enq"][i]),
+            deadline_s=float(flows["dead"][i]),
+            link_rate_bps=float(flows["link_rate_bps"][i]))
+        os_.enqueue(req, int(flows["cohort"][i]))
+        vs.enqueue(req, int(flows["cohort"][i]))
+    done_a = os_.advance(0.06, r1)
+    done_b = vs.advance(0.06, r2)
+    assert len(done_a) == len(done_b)
+    ues = list(range(0, 24, 2))
+    oracle_parts = os_.migrate_ues(ues, flush_tb=True)
+    vec_parts = vs.migrate_ues(ues, flush_tb=True)
+    assert len(oracle_parts) == len(vec_parts) == len(ues)
+    for ol, vp in zip(oracle_parts, vec_parts):
+        vl = vp.flows()          # ParkedFlows -> StreamFlow views
+        assert len(ol) == len(vl)
+        for x, y in zip(ol, vl):
+            _flow_eq(x, y, "park")
+    # survivors drain identically after the batched compaction
+    os_.adopt_batch([f for p in oracle_parts for f in p], 0.1, 999)
+    from repro.core.ran_vec import ParkedFlows
+    vs.adopt_batch(ParkedFlows.concat(vec_parts), 0.1, 999)
+    fa = os_.advance(float("inf"), r1)
+    fb = vs.advance(float("inf"), r2)
+    assert len(fa) == len(fb) == 120 - len(done_a)
+    for x, y in zip(fa, fb):
+        _flow_eq(x, y, "post-adopt drain")
+
+
+def test_mass_blackout_chaos_drain_parity():
+    """The full batched park/adopt cycle under overlapping mass
+    blackouts: both engines run ``chaos_drain`` on an identical schedule
+    and must agree field-for-field, with paired HARQ rng positions."""
+    from repro.core.engine_vec import chaos_drain
+    os_, vs, flows = _chaos_pair(n_flows=200, n_ues=40)
+    blk = [(0.05, 0.25, list(range(0, 40, 2))), (0.12, 0.30, [1, 3, 5])]
+    r1, r2 = (np.random.default_rng(np.random.SeedSequence(7))
+              for _ in range(2))
+    fa = chaos_drain(os_, flows, r1, blackouts=blk)
+    fb = chaos_drain(vs, flows, r2, blackouts=blk)
+    assert len(fa) == len(fb) == 200
+    key = lambda f: (f.req.ue_id, f.req.enqueue_s, f.req.n_bytes)
+    for x, y in zip(sorted(fa, key=key), sorted(fb, key=key)):
+        _flow_eq(x, y, "chaos drain")
+    _check_tape_position(vs.cell._tape, r1, r2, "chaos drain")
+
+
+# ---------------------------------------------------------------------------
 # jain_fairness edge cases (used by both engines' KPI rollups)
 # ---------------------------------------------------------------------------
 
